@@ -1,0 +1,68 @@
+"""Pallas kernel micro-benchmarks (CPU interpret mode = correctness-scale
+timings; TPU shapes documented in the kernel BlockSpecs).
+
+Compares the factorized sparse product (the paper's contribution) against
+the naive all-pairs evaluation — the headline speedup — plus routing and
+block-materialization throughput.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.api import ForestKernel
+from repro.core.factorization import naive_swlc
+from repro.data.synthetic import gaussian_classes
+
+__all__ = ["run"]
+
+
+def _time(fn, reps=3):
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(fast: bool = True, out=print):
+    n = 3000 if fast else 20000
+    X, y = gaussian_classes(n, d=20, n_classes=5, seed=0)
+    fk = ForestKernel(kernel_method="kerf", n_trees=25, seed=0)
+    fk.fit_forest(X, y)
+
+    out("name,us_per_call,derived")
+
+    t_cache = _time(lambda: fk.build_kernel_cache(), reps=1)
+    out(f"build_kernel_cache,{t_cache*1e6:.0f},N={n}")
+
+    t_full = _time(lambda: fk.kernel(set_diagonal=False))
+    P = fk.kernel(set_diagonal=False)
+    out(f"sparse_full_kernel,{t_full*1e6:.0f},nnz={P.nnz}")
+
+    # naive oracle on a subset, extrapolated
+    m = 400
+    gl = fk.ctx.global_leaves()[:m]
+    q = fk.assignment.query_weights(fk.ctx.leaves)[:m]
+    t_naive_sub = _time(lambda: naive_swlc(gl, gl, q, q), reps=1)
+    t_naive_full = t_naive_sub * (n / m) ** 2
+    out(f"naive_allpairs_extrapolated,{t_naive_full*1e6:.0f},"
+        f"speedup={t_naive_full/t_full:.1f}x")
+
+    t_blk = _time(lambda: fk.kernel_block(np.arange(256), np.arange(256)))
+    out(f"kernel_block_256x256,{t_blk*1e6:.0f},")
+
+    op = fk.operator()
+    v = np.random.default_rng(0).normal(size=n)
+    t_mv = _time(lambda: op @ v)
+    out(f"implicit_matvec,{t_mv*1e6:.0f},O(nnz) spectral primitive")
+
+    # Pallas interpret-mode parity timings (structural, not TPU wall-time)
+    from repro.kernels.block_prox.ops import block_prox
+    sub = np.arange(256)
+    t_pl = _time(lambda: np.asarray(
+        block_prox(gl[sub % m], q[sub % m], gl[sub % m], q[sub % m])), reps=1)
+    out(f"pallas_block_prox_interp,{t_pl*1e6:.0f},interpret-mode")
+    return t_full, t_naive_full

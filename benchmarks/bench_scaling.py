@@ -1,0 +1,107 @@
+"""Paper Fig 4.2 / Fig H.1 — near-linear time & memory scaling of exact
+kernel computation with sample size.
+
+Axes of variation (as in the paper): sample size N, proximity definition,
+forest type (RF/ET), min leaf size, max depth.  Reported cost = cache
+construction + query/reference maps + full sparse kernel (forest training
+excluded, matching the paper's protocol).  Slopes come from log-log linear
+regression; the paper's claim is slope ≈ 1, well below 2.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.api import ForestKernel
+from repro.core.leafmap import sparse_bytes
+from repro.data.synthetic import gaussian_classes
+
+__all__ = ["measure_kernel_cost", "scaling_curve", "fit_slope", "run"]
+
+
+def measure_kernel_cost(fk: ForestKernel) -> Dict[str, float]:
+    t0 = time.perf_counter()
+    fk.build_kernel_cache()
+    t1 = time.perf_counter()
+    P = fk.kernel(set_diagonal=False)
+    t2 = time.perf_counter()
+    mem = fk.memory_bytes()
+    mem_total = mem["total"] + sparse_bytes(P)
+    return {"cache_s": t1 - t0, "kernel_s": t2 - t1,
+            "total_s": t2 - t0, "bytes": float(mem_total),
+            "nnz": float(P.nnz), "lambda_bar": float(P.nnz) / P.shape[0]}
+
+
+def scaling_curve(ns, *, method="gap", model_type="rf", n_trees=30,
+                  min_samples_leaf=1, max_depth=64, d=30, n_classes=7,
+                  seed=0, reps=1) -> List[Dict]:
+    rows = []
+    for n in ns:
+        X, y = gaussian_classes(n, d=d, n_classes=n_classes, seed=seed)
+        fk = ForestKernel(model_type=model_type, kernel_method=method,
+                          n_trees=n_trees, min_samples_leaf=min_samples_leaf,
+                          max_depth=max_depth, seed=seed)
+        fk.fit_forest(X, y)
+        best = None
+        for _ in range(reps):
+            fk.Q_ = fk.W_ = None
+            m = measure_kernel_cost(fk)
+            best = m if best is None else min(best, m, key=lambda r: r["total_s"])
+        best.update({"n": n, "method": method, "model": model_type,
+                     "n_min": min_samples_leaf, "depth": max_depth})
+        rows.append(best)
+    return rows
+
+
+def fit_slope(rows, xkey="n", ykey="total_s") -> float:
+    x = np.log([r[xkey] for r in rows])
+    y = np.log([max(r[ykey], 1e-9) for r in rows])
+    return float(np.polyfit(x, y, 1)[0])
+
+
+def run(fast: bool = True, out=print):
+    ns = [2000, 4000, 8000, 16000, 32000] if fast else \
+        [4000, 8000, 16000, 32000, 64000, 128000]
+    out("table,variant,n,time_s,bytes,nnz,lambda_bar")
+
+    slopes = {}
+    # (ii) across proximity definitions (paper Fig 4.2 middle)
+    for method in ["original", "kerf", "oob", "gap"]:
+        rows = scaling_curve(ns, method=method)
+        for r in rows:
+            out(f"fig4.2-method,{method},{r['n']},{r['total_s']:.4f},"
+                f"{r['bytes']:.0f},{r['nnz']:.0f},{r['lambda_bar']:.1f}")
+        slopes[f"time[{method}]"] = fit_slope(rows)
+        slopes[f"mem[{method}]"] = fit_slope(rows, ykey="bytes")
+
+    # forest type ablation (Fig H.1 row 2)
+    rows = scaling_curve(ns, method="kerf", model_type="et")
+    for r in rows:
+        out(f"figH.1-et,kerf,{r['n']},{r['total_s']:.4f},{r['bytes']:.0f},"
+            f"{r['nnz']:.0f},{r['lambda_bar']:.1f}")
+    slopes["time[et]"] = fit_slope(rows)
+
+    # min leaf size ablation (Fig 4.2 bottom)
+    for n_min in [1, 5, 20]:
+        rows = scaling_curve(ns[:4] if fast else ns, method="gap",
+                             min_samples_leaf=n_min)
+        for r in rows:
+            out(f"fig4.2-nmin,{n_min},{r['n']},{r['total_s']:.4f},"
+                f"{r['bytes']:.0f},{r['nnz']:.0f},{r['lambda_bar']:.1f}")
+        slopes[f"time[nmin={n_min}]"] = fit_slope(rows)
+
+    # depth truncation (Fig H.1 bottom: approaches quadratic)
+    for depth in [64, 8]:
+        rows = scaling_curve(ns[:4] if fast else ns, method="original",
+                             max_depth=depth)
+        for r in rows:
+            out(f"figH.1-depth,{depth},{r['n']},{r['total_s']:.4f},"
+                f"{r['bytes']:.0f},{r['nnz']:.0f},{r['lambda_bar']:.1f}")
+        slopes[f"time[depth={depth}]"] = fit_slope(rows)
+        slopes[f"mem[depth={depth}]"] = fit_slope(rows, ykey="bytes")
+
+    for k, v in slopes.items():
+        out(f"slope,{k},,{v:.3f},,,")
+    return slopes

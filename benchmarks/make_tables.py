@@ -1,0 +1,67 @@
+"""Render §Dry-run and §Roofline markdown tables into EXPERIMENTS.md.
+
+  PYTHONPATH=src:. python -m benchmarks.make_tables
+"""
+from __future__ import annotations
+
+import re
+
+from benchmarks.roofline import load_records, roofline_terms
+
+
+def dryrun_table(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | ok | HLO flops/dev | HBM bytes/dev | "
+        "coll bytes/dev | mem/dev (args+temp) | compile |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r.get("ok"):
+            mm = r["memory"]
+            mem = (mm["argument_size"] + mm["temp_size"]) / 1e9
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ✓ | "
+                f"{r['tc_flops']:.2e} | {r['tc_hbm_bytes']:.2e} | "
+                f"{r['tc_collective_total']:.2e} | {mem:.1f} GB | "
+                f"{r['compile_s']:.0f}s |")
+        else:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ✗ | "
+                         f"{r.get('error','')[:60]} | | | | |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh="16x16") -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("mesh") != mesh or not r.get("ok"):
+            continue
+        t = roofline_terms(r)
+        lines.append(
+            f"| {t['arch']} | {t['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"**{t['dominant']}** | {t['useful_ratio']:.3f} | "
+            f"{t['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load_records()
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    dt = dryrun_table(recs)
+    rt = roofline_table(recs)
+    text = re.sub(r"<!-- DRYRUN_TABLE -->.*?(?=\n## |\Z)",
+                  f"<!-- DRYRUN_TABLE -->\n\n{dt}\n\n", text, flags=re.S)
+    text = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\n## |\Z)",
+                  f"<!-- ROOFLINE_TABLE -->\n\n{rt}\n\n", text, flags=re.S)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print(f"wrote tables for {len(recs)} records")
+
+
+if __name__ == "__main__":
+    main()

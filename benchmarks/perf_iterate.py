@@ -1,0 +1,62 @@
+"""§Perf hillclimb driver: re-lower chosen cells with optimization toggles
+and record before/after roofline terms.
+
+  PYTHONPATH=src python -m benchmarks.perf_iterate
+
+Cells (chosen per brief from the baseline roofline table):
+  A granite_moe_3b_a800m × train_4k — worst useful_ratio (0.015)
+  B qwen3_moe_235b_a22b × train_4k — most collective-bound (1607 s)
+  C minicpm_2b × train_4k          — technique-representative of the fix
+                                     class (non-divisible heads) + worst
+                                     dense memory term
+
+Iterations are toggled through repro.distributed.logical.perf_env plus the
+module-level MoE dispatch rewrite (group-local dispatch, see models/moe.py).
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+import json      # noqa: E402
+import sys       # noqa: E402
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+OUT = "results/perf"
+
+RUNS = [
+    # (tag, arch, shape, perf_opts)
+    ("A1-expert_pad", "granite_moe_3b_a800m", "train_4k",
+     {"expert_pad": True, "head_pad": True}),
+    ("B1-group_dispatch", "qwen3_moe_235b_a22b", "train_4k",
+     {"expert_pad": True, "head_pad": True}),
+    ("C1-head_pad", "minicpm_2b", "train_4k",
+     {"expert_pad": True, "head_pad": True}),
+]
+
+
+def main():
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    os.makedirs(OUT, exist_ok=True)
+    for tag, arch, shape, opts in RUNS:
+        if only and only not in tag:
+            continue
+        rec = run_cell(arch, shape, multi_pod=False, out_dir=None,
+                       perf_opts=opts)
+        rec["tag"] = tag
+        rec["perf_opts"] = opts
+        with open(f"{OUT}/{tag}.json", "w") as f:
+            json.dump(rec, f, indent=1)
+        if rec.get("ok"):
+            mm = rec["memory"]
+            print(f"{tag}: flops={rec['tc_flops']:.3e} "
+                  f"hbm={rec['tc_hbm_bytes']:.3e} "
+                  f"hbm_fused={rec.get('tc_hbm_bytes_fused', 0):.3e} "
+                  f"coll={rec['tc_collective_total']:.3e} "
+                  f"temp={mm['temp_size']/1e9:.1f}GB", flush=True)
+        else:
+            print(f"{tag}: FAIL {rec['error']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""§Roofline — three-term roofline per (arch × shape × mesh) from dry-runs.
+
+Reads the records written by ``repro.launch.dryrun`` (which embeds the
+trip-count-aware HLO costs), converts them to seconds against TPU v5e
+hardware constants, identifies the dominant term, and reports
+MODEL_FLOPS / HLO_FLOPs (useful-compute fraction).
+
+Hardware model (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.  The collective term divides wire bytes by one link's bandwidth —
+a deliberately conservative single-link model (ring traffic on one torus
+axis); multi-axis overlap would reduce it.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs.base import SHAPES, get_config
+
+__all__ = ["model_flops", "roofline_terms", "load_records", "report"]
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """Analytic 'useful' FLOPs per step (global, all devices).
+
+    train: 6·N_active·tokens + causal attention (6·B·S²·H·hd per layer)
+    prefill: one third of the train coefficient (forward only)
+    decode: 2·N_active·B + attention cache reads 4·B·H·hd·S_kv per layer
+    """
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    B, S = cell.global_batch, cell.seq_len
+    P_total = cfg.param_count()
+    embed = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    P_body = P_total - embed
+    if cfg.family == "moe":
+        moe_p = cfg.n_layers * cfg.n_experts * 3 * cfg.d_model * cfg.d_ff_expert
+        P_act = P_body - moe_p + moe_p * cfg.top_k / cfg.n_experts
+    else:
+        P_act = P_body
+    # logits matmul is real useful compute
+    logits = 2 * cfg.d_model * cfg.vocab
+
+    if cfg.family in ("dense", "moe", "vlm", "audio", "hybrid") and cfg.n_heads:
+        if cfg.window and cell.step != "decode":
+            attn_ctx = min(cfg.window, S)
+            n_glob = len(cfg.global_layers)
+            attn_fwd = (4 * B * S * attn_ctx * cfg.n_heads * cfg.head_dim * 0.5
+                        * (cfg.n_layers - n_glob)
+                        + 4 * B * S * S * cfg.n_heads * cfg.head_dim * 0.5 * n_glob)
+        else:
+            attn_fwd = 4 * B * S * S * cfg.n_heads * cfg.head_dim * 0.5 \
+                * cfg.n_layers
+    else:
+        attn_fwd = 0.0
+    if cfg.family in ("ssm", "hybrid"):
+        # SSD: intra-chunk (Q=256) quadratic + state channel
+        Q = min(256, S)
+        ssd = (2 * B * S * Q * cfg.ssm_heads * cfg.ssm_head_dim
+               + 4 * B * S * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state)
+        ssd *= cfg.n_layers
+        attn_fwd += ssd
+
+    tokens = B * S
+    if cell.step == "train":
+        return 6 * P_act * tokens + 3 * attn_fwd + 3 * logits * tokens
+    if cell.step == "prefill":
+        return 2 * P_act * tokens + attn_fwd + logits * tokens
+    # decode: one token; attention reads the whole cache
+    if cfg.family in ("ssm",):
+        attn_dec = 4 * B * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state \
+            * cfg.n_layers
+    elif cfg.family == "hybrid":
+        n_glob = len(cfg.global_layers)
+        win = min(cfg.window, S) if cfg.window else S
+        attn_dec = (4 * B * cfg.n_heads * cfg.head_dim
+                    * (win * (cfg.n_layers - n_glob) + S * n_glob)
+                    + 4 * B * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state
+                    * cfg.n_layers)
+    else:
+        attn_dec = 4 * B * cfg.n_heads * cfg.head_dim * S * cfg.n_layers
+    return 2 * P_act * B + attn_dec + logits * B
+
+
+def roofline_terms(rec: Dict) -> Optional[Dict]:
+    if not rec.get("ok"):
+        return None
+    n_dev = rec["n_devices"]
+    # tc_* quantities are per-device (SPMD module)
+    compute_s = rec["tc_flops"] / PEAK_FLOPS
+    memory_s = rec["tc_hbm_bytes"] / HBM_BW
+    collective_s = rec["tc_collective_total"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_flops_global = rec["tc_flops"] * n_dev
+    bound_s = max(terms.values())
+    ideal_s = mf / (n_dev * PEAK_FLOPS)
+    out = {
+        **rec, **terms,
+        "dominant": dom.replace("_s", ""),
+        "model_flops_global": mf,
+        "useful_ratio": mf / max(hlo_flops_global, 1.0),
+        "roofline_fraction": ideal_s / max(bound_s, 1e-12),
+    }
+    return out
+
+
+def load_records(dryrun_dir: str = "results/dryrun") -> List[Dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def report(dryrun_dir: str = "results/dryrun", mesh: str = "16x16",
+           out=print) -> List[Dict]:
+    out("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+        "useful_ratio,roofline_fraction")
+    rows = []
+    for rec in load_records(dryrun_dir):
+        if rec.get("mesh") != mesh:
+            continue
+        r = roofline_terms(rec)
+        if r is None:
+            out(f"{rec['arch']},{rec['shape']},{rec['mesh']},FAILED,,,,,")
+            continue
+        rows.append(r)
+        out(f"{r['arch']},{r['shape']},{r['mesh']},{r['compute_s']:.4f},"
+            f"{r['memory_s']:.4f},{r['collective_s']:.4f},{r['dominant']},"
+            f"{r['useful_ratio']:.3f},{r['roofline_fraction']:.3f}")
+    return rows

@@ -1,0 +1,144 @@
+"""ForestKernel — the paper's unified user-facing API (Appendix D).
+
+Three stages:
+  1. ``fit_forest(X, y)``        — train the tree-ensemble backend only.
+  2. ``build_kernel_cache()``    — compute θ, the reference map W, and the
+                                   training query map Q (sparse CSR factors).
+  3. kernel ops                  — full kernel / blocks / matvec operator /
+                                   OOS query maps / proximity-weighted
+                                   prediction / leaf-PCA, all through the
+                                   factored form (P is never required).
+
+``fit`` = fit_forest + build_kernel_cache, keeping the paper's API shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import scipy.sparse as sp
+
+from ..forest.ensemble import (BaseForest, ExtraTrees, GradientBoostedTrees,
+                               RandomForest)
+from .context import EnsembleContext
+from .factorization import (full_kernel, kernel_block, kernel_matvec_operator,
+                            proximity_predict, topk_neighbors)
+from .leafmap import build_leaf_map, sparse_bytes
+from .spectral import LeafPCA
+from .weights import WeightAssignment, get_assignment
+
+__all__ = ["ForestKernel"]
+
+_MODEL_TYPES = {
+    "rf": RandomForest,
+    "et": ExtraTrees,
+    "gbt": GradientBoostedTrees,
+}
+
+
+@dataclasses.dataclass
+class ForestKernel:
+    model_type: str = "rf"           # 'rf' | 'et' | 'gbt'
+    kernel_method: str = "gap"       # 'original' | 'kerf' | 'oob' | 'gap' | 'ih' | 'boosted'
+    task: str = "classification"
+    n_trees: int = 100
+    max_depth: int = 64
+    min_samples_leaf: int = 1
+    max_features: Optional[str] = "sqrt"
+    n_bins: int = 64
+    seed: int = 0
+    dtype: type = np.float64
+
+    forest: Optional[BaseForest] = None
+    ctx: Optional[EnsembleContext] = None
+    assignment: Optional[WeightAssignment] = None
+    Q_: Optional[sp.csr_matrix] = None   # training query map (N, L)
+    W_: Optional[sp.csr_matrix] = None   # reference map (N, L)
+
+    # ---------------- fitting ----------------
+    def fit_forest(self, X: np.ndarray, y: np.ndarray) -> "ForestKernel":
+        cls = _MODEL_TYPES[self.model_type]
+        self.forest = cls(
+            n_trees=self.n_trees, max_depth=self.max_depth,
+            min_samples_leaf=self.min_samples_leaf,
+            max_features=self.max_features, n_bins=self.n_bins,
+            task=self.task, seed=self.seed)
+        self.forest.fit(X, y)
+        return self
+
+    def build_kernel_cache(self) -> "ForestKernel":
+        assert self.forest is not None, "call fit_forest first"
+        self.ctx = EnsembleContext.from_forest(self.forest)
+        self.assignment = get_assignment(self.kernel_method, self.ctx)
+        gl = self.ctx.global_leaves()
+        q = self.assignment.query_weights(self.ctx.leaves)
+        self.Q_ = build_leaf_map(gl, q, self.ctx.total_leaves, self.dtype)
+        if self.assignment.symmetric:
+            self.W_ = self.Q_
+        else:
+            w = self.assignment.reference_weights(self.ctx.leaves)
+            self.W_ = build_leaf_map(gl, w, self.ctx.total_leaves, self.dtype)
+        return self
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "ForestKernel":
+        return self.fit_forest(X, y).build_kernel_cache()
+
+    # ---------------- maps ----------------
+    def reference_map(self) -> sp.csr_matrix:
+        return self.W_
+
+    def query_map(self, X: Optional[np.ndarray] = None) -> sp.csr_matrix:
+        """Training query map (X=None) or OOS query map for new samples."""
+        if X is None:
+            return self.Q_
+        leaves = self.forest.apply(X)
+        q = self.assignment.oos_query_weights(leaves)
+        gl = self.ctx.global_leaves(leaves)
+        return build_leaf_map(gl, q, self.ctx.total_leaves, self.dtype)
+
+    # ---------------- kernel ops ----------------
+    def kernel(self, set_diagonal: bool = True) -> sp.csr_matrix:
+        d = self.assignment.diagonal if set_diagonal else None
+        return full_kernel(self.Q_, self.W_, diagonal=d)
+
+    def kernel_block(self, rows: np.ndarray, cols: Optional[np.ndarray] = None,
+                     X_rows: Optional[np.ndarray] = None) -> np.ndarray:
+        Q = self.Q_ if X_rows is None else self.query_map(X_rows)
+        r = np.arange(Q.shape[0]) if X_rows is not None else rows
+        return kernel_block(Q, self.W_, r, cols)
+
+    def operator(self):
+        return kernel_matvec_operator(self.Q_, self.W_)
+
+    def topk(self, k: int = 10):
+        return topk_neighbors(self.Q_, self.W_, k)
+
+    # ---------------- downstream ----------------
+    def predict(self, X: Optional[np.ndarray] = None) -> np.ndarray:
+        """Proximity-weighted prediction (train-set if X is None, else OOS)."""
+        Qq = self.Q_ if X is None else self.query_map(X)
+        y = self.ctx.y
+        if self.task == "classification":
+            n_classes = self.forest.n_classes_
+            scores = proximity_predict(Qq, self.W_, y, n_classes=n_classes,
+                                       exclude_self=(X is None))
+            return scores.argmax(1)
+        return proximity_predict(Qq, self.W_, y, exclude_self=(X is None))
+
+    def leaf_pca(self, n_components: int = 50) -> LeafPCA:
+        return LeafPCA(n_components=n_components).fit(self.Q_)
+
+    # ---------------- accounting ----------------
+    def memory_bytes(self) -> dict:
+        """Bytes of cached metadata + factors (the paper's reported memory)."""
+        ctx = self.ctx
+        meta = sum(a.nbytes for a in [
+            ctx.leaves, ctx.leaf_mass, ctx.leaf_mass_inbag, ctx.leaf_offset]
+            if a is not None)
+        if ctx.inbag is not None:
+            meta += ctx.inbag.nbytes + ctx.oob.nbytes + ctx.oob_count.nbytes
+        out = {"metadata": int(meta), "Q": sparse_bytes(self.Q_),
+               "W": 0 if self.W_ is self.Q_ else sparse_bytes(self.W_)}
+        out["total"] = sum(out.values())
+        return out

@@ -1,0 +1,81 @@
+"""Ensemble context (T, θ) — §2.2 of the paper.
+
+Bundles everything the SWLC weight assignments need: the routed leaf codes of
+the training set, global leaf indexing, and the auxiliary statistics θ
+(leaf masses, in-bag multiplicities, OOB indicators, per-tree weights).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..forest.ensemble import BaseForest
+
+__all__ = ["EnsembleContext"]
+
+
+@dataclasses.dataclass
+class EnsembleContext:
+    """Fixed context computed once after forest training (cost O(N T h̄))."""
+
+    leaves: np.ndarray          # (N, T) int32 within-tree leaf ids of TRAIN samples
+    leaf_offset: np.ndarray     # (T,) int64 global leaf base per tree
+    n_leaves: np.ndarray        # (T,) int32
+    total_leaves: int
+    n_train: int
+
+    # θ — auxiliary statistics
+    leaf_mass: np.ndarray           # (L,) float64: # train samples per global leaf
+    leaf_mass_inbag: np.ndarray     # (L,) float64: Σ_i c_t(i) per global leaf
+    inbag: Optional[np.ndarray]     # (T, N) int32 in-bag multiplicities c_t(x_i)
+    oob: Optional[np.ndarray]       # (T, N) bool  o_t(x_i)
+    oob_count: Optional[np.ndarray]  # (N,) int64  S(x_i)
+    tree_weights: np.ndarray        # (T,) float64 — boosted contribution weights
+    y: Optional[np.ndarray] = None  # training labels (needed by IH weights)
+    X: Optional[np.ndarray] = None  # training features (needed by IH weights)
+    tree_features: Optional[list] = None  # per-tree split-feature sets (IH)
+
+    @property
+    def n_trees(self) -> int:
+        return int(self.leaves.shape[1])
+
+    def global_leaves(self, leaves: Optional[np.ndarray] = None) -> np.ndarray:
+        """(N, T) int64 global leaf indices (tree-offset applied)."""
+        lv = self.leaves if leaves is None else leaves
+        return lv.astype(np.int64) + self.leaf_offset[None, :]
+
+    @classmethod
+    def from_forest(cls, forest: BaseForest, X: Optional[np.ndarray] = None,
+                    y: Optional[np.ndarray] = None) -> "EnsembleContext":
+        X = forest.X_ if X is None else X
+        y = forest.y_ if y is None else y
+        leaves = forest.apply(X)                      # (N, T)
+        n, T = leaves.shape
+        n_leaves = np.asarray([t.n_leaves for t in forest.trees_], dtype=np.int32)
+        leaf_offset = np.concatenate([[0], np.cumsum(n_leaves)[:-1]]).astype(np.int64)
+        L = int(n_leaves.sum())
+        gl = leaves.astype(np.int64) + leaf_offset[None, :]
+        leaf_mass = np.bincount(gl.ravel(), minlength=L).astype(np.float64)
+
+        inbag = forest.inbag_
+        if inbag is not None:
+            oob = inbag == 0
+            oob_count = oob.sum(0).astype(np.int64)
+            leaf_mass_inbag = np.bincount(
+                gl.T.ravel(), weights=inbag.astype(np.float64).ravel(),
+                minlength=L)
+        else:
+            oob, oob_count = None, None
+            leaf_mass_inbag = leaf_mass.copy()
+
+        tw = forest.tree_weights_
+        tw = np.ones(T) if tw is None else np.asarray(tw, dtype=np.float64)
+        tree_features = [np.unique(t.feature[t.feature >= 0]) for t in forest.trees_]
+        return cls(
+            leaves=leaves, leaf_offset=leaf_offset, n_leaves=n_leaves,
+            total_leaves=L, n_train=n, leaf_mass=leaf_mass,
+            leaf_mass_inbag=leaf_mass_inbag, inbag=inbag, oob=oob,
+            oob_count=oob_count, tree_weights=tw, y=y, X=X,
+            tree_features=tree_features)

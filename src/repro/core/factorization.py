@@ -1,0 +1,108 @@
+"""Exact finite-sample sparse factorization P = Q Wᵀ (Prop 3.6, row-wise).
+
+With row-stacked leaf maps Q, W ∈ R^{N×L} (column convention of the paper's
+Prop 3.6 transposed to the ML row convention, as in its Appendix D), the
+proximity matrix is ``P = Q @ W.T`` — a sparse·sparseᵀ product whose work is
+restricted to leaf-colliding pairs: O(N T λ̄) (paper §3.3).
+
+This module also provides the *implicit* operator view (matvec / matmat via
+the factors), which is what the spectral and prediction layers use so that
+P is never materialized.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+import scipy.sparse as sp
+from scipy.sparse.linalg import LinearOperator
+
+__all__ = ["full_kernel", "kernel_block", "kernel_matvec_operator",
+           "proximity_predict", "topk_neighbors", "naive_swlc"]
+
+
+def full_kernel(Q: sp.csr_matrix, W: sp.csr_matrix,
+                diagonal: Optional[float] = None) -> sp.csr_matrix:
+    """Materialize the full sparse proximity matrix P = Q Wᵀ."""
+    P = (Q @ W.T).tocsr()
+    if diagonal is not None:
+        P = P.tolil()
+        P.setdiag(diagonal)
+        P = P.tocsr()
+    return P
+
+
+def kernel_block(Q: sp.csr_matrix, W: sp.csr_matrix, rows: np.ndarray,
+                 cols: Optional[np.ndarray] = None, dense: bool = True):
+    """P[rows, cols] without forming P: (Q[rows] @ W[cols].T)."""
+    B = Q[rows] @ (W if cols is None else W[cols]).T
+    return np.asarray(B.todense()) if dense else B.tocsr()
+
+
+def kernel_matvec_operator(Q: sp.csr_matrix, W: sp.csr_matrix) -> LinearOperator:
+    """LinearOperator for P = Q Wᵀ: Pv = Q (Wᵀ v); O(nnz) per apply."""
+    n_q, n_w = Q.shape[0], W.shape[0]
+
+    def mv(v):
+        return Q @ (W.T @ v)
+
+    def rmv(v):
+        return W @ (Q.T @ v)
+
+    return LinearOperator((n_q, n_w), matvec=mv, rmatvec=rmv,
+                          matmat=lambda V: Q @ (W.T @ V), dtype=Q.dtype)
+
+
+def proximity_predict(Qq: sp.csr_matrix, W: sp.csr_matrix, y: np.ndarray,
+                      n_classes: Optional[int] = None,
+                      exclude_self: bool = False) -> np.ndarray:
+    """Proximity-weighted prediction (paper Appendix I).
+
+    classification: ŷ(x) = argmax_c Σ_j P(x, j) 1[y_j = c]
+    regression:     ŷ(x) = Σ_j P(x, j) y_j / Σ_j P(x, j)
+
+    Computed as (Qq Wᵀ) Y without materializing P: Qq @ (Wᵀ Y), where Y is
+    the (N, C) one-hot label matrix (or (N, 1) target column).
+    """
+    if n_classes is not None:
+        Y = np.zeros((len(y), n_classes))
+        Y[np.arange(len(y)), y.astype(np.int64)] = 1.0
+    else:
+        Y = np.stack([y.astype(np.float64), np.ones(len(y))], axis=1)
+    S = W.T @ Y                       # (L, C) — one pass over W's nnz
+    out = Qq @ S                      # (Nq, C) — one pass over Qq's nnz
+    if exclude_self:
+        # remove each query's own contribution (diagonal of P against itself)
+        diag = np.asarray(Qq.multiply(W).sum(axis=1)).ravel()
+        out -= diag[:, None] * Y
+    if n_classes is not None:
+        return out
+    return out[:, 0] / np.maximum(out[:, 1], 1e-300)
+
+
+def topk_neighbors(Q: sp.csr_matrix, W: sp.csr_matrix, k: int,
+                   block: int = 4096) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-query top-k proximities, streamed in row blocks (never dense NxN)."""
+    n = Q.shape[0]
+    idx = np.zeros((n, k), dtype=np.int64)
+    val = np.zeros((n, k))
+    WT = W.T.tocsc() if not sp.isspmatrix_csc(W.T) else W.T
+    for i0 in range(0, n, block):
+        B = (Q[i0:i0 + block] @ WT).tocsr()
+        for r in range(B.shape[0]):
+            lo, hi = B.indptr[r], B.indptr[r + 1]
+            cols, vals = B.indices[lo:hi], B.data[lo:hi]
+            if len(vals) > k:
+                sel = np.argpartition(vals, -k)[-k:]
+                cols, vals = cols[sel], vals[sel]
+            order = np.argsort(-vals)
+            idx[i0 + r, :len(cols)] = cols[order]
+            val[i0 + r, :len(vals)] = vals[order]
+    return idx, val
+
+
+def naive_swlc(leaves_q: np.ndarray, leaves_w: np.ndarray, q: np.ndarray,
+               w: np.ndarray) -> np.ndarray:
+    """O(N² T) direct evaluation of Def 3.1 — the test oracle."""
+    coll = leaves_q[:, None, :] == leaves_w[None, :, :]        # (Nq, Nw, T)
+    return np.einsum("it,jt,ijt->ij", q, w, coll.astype(np.float64))

@@ -1,0 +1,97 @@
+"""TPU-native SWLC operations in JAX (DESIGN.md §3).
+
+On TPU we avoid CSR scatter/gather entirely.  The factored kernel apply
+``P v = Q (Wᵀ v)`` becomes two dense-indexable primitives:
+
+  1. bucket:  s[leaf] = Σ_{(i,t): gl[i,t]=leaf} w[i,t] · v[i]   (segment_sum)
+  2. gather:  (Pv)[i] = Σ_t q[i,t] · s[gl[i,t]]
+
+Both are O(N·T) with no data-dependent shapes, so they jit/pjit cleanly.
+The distributed version shards samples over the "data" mesh axis and trees
+over the "model" mesh axis: each model shard buckets its own tree slice into
+a private leaf-range (leaf ids are tree-major), so the only collectives are
+a psum over "model" for the final gather-side reduction and a psum over
+"data" inside downstream reductions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["swlc_matvec", "swlc_matmat", "swlc_block", "swlc_predict",
+           "sharded_swlc_matmat"]
+
+
+@functools.partial(jax.jit, static_argnames=("total_leaves",))
+def swlc_matvec(gl: jax.Array, q: jax.Array, w: jax.Array, v: jax.Array,
+                total_leaves: int) -> jax.Array:
+    """(P v)[i] for P = SWLC(q, w);  gl/q/w: (N, T), v: (N,)."""
+    s = jax.ops.segment_sum((w * v[:, None]).ravel(), gl.ravel(),
+                            num_segments=total_leaves)
+    return (q * s[gl]).sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("total_leaves",))
+def swlc_matmat(gl: jax.Array, q: jax.Array, w: jax.Array, V: jax.Array,
+                total_leaves: int) -> jax.Array:
+    """(P V) for V: (N, C)  — the proximity-weighted prediction primitive."""
+    n, T = gl.shape
+    contrib = w[:, :, None] * V[:, None, :]              # (N, T, C)
+    s = jax.ops.segment_sum(contrib.reshape(n * T, -1), gl.ravel(),
+                            num_segments=total_leaves)   # (L, C)
+    return (q[:, :, None] * s[gl]).sum(axis=1)
+
+
+def swlc_block(gl_q: jax.Array, q: jax.Array, gl_w: jax.Array,
+               w: jax.Array) -> jax.Array:
+    """Dense proximity block: P[i,j] = Σ_t q[i,t] w[j,t] 1[gl_q[i,t]=gl_w[j,t]].
+
+    Pure-jnp reference for the Pallas block kernel (B_q·B_r·T work).
+    """
+    coll = gl_q[:, None, :] == gl_w[None, :, :]
+    return jnp.einsum("it,jt,ijt->ij", q, w, coll.astype(q.dtype))
+
+
+def swlc_predict(gl_q, q, gl_w, w, Y, total_leaves: int) -> jax.Array:
+    """OOS proximity prediction: rows = queries, refs = (gl_w, w, Y)."""
+    n_w, T = gl_w.shape
+    contrib = w[:, :, None] * Y[:, None, :]
+    s = jax.ops.segment_sum(contrib.reshape(n_w * T, -1), gl_w.ravel(),
+                            num_segments=total_leaves)
+    return (q[:, :, None] * s[gl_q]).sum(axis=1)
+
+
+def sharded_swlc_matmat(mesh: Mesh, gl: jax.Array, q: jax.Array, w: jax.Array,
+                        V: jax.Array, total_leaves: int,
+                        data_axis: str = "data",
+                        model_axis: str = "model") -> jax.Array:
+    """P V on a (data, model) mesh: samples sharded over `data`, trees over
+    `model`.  Leaf ids are tree-major, so each model shard's buckets are a
+    private contiguous range — the bucket stage needs **no** collective; the
+    bucket table is psum'ed over `data` and the per-tree partial outputs are
+    psum'ed over `model`.
+    """
+    n, T = gl.shape
+
+    def local(gl_s, q_s, w_s, V_s):
+        # shapes: gl_s (n/dp, T/mp), V_s (n/dp, C)
+        nl, Tl = gl_s.shape
+        contrib = w_s[:, :, None] * V_s[:, None, :]
+        # local leaf ids are globally unique per model shard -> bucket into a
+        # full-size table to keep indexing static, then psum over data only.
+        s = jax.ops.segment_sum(contrib.reshape(nl * Tl, -1), gl_s.ravel(),
+                                num_segments=total_leaves)
+        s = jax.lax.psum(s, data_axis)                     # (L, C)
+        out = (q_s[:, :, None] * s[gl_s]).sum(axis=1)      # (n/dp, C)
+        return jax.lax.psum(out, model_axis)
+
+    spec_nt = P(data_axis, model_axis)
+    spec_nc = P(data_axis, None)
+    fn = jax.shard_map(local, mesh=mesh,
+                       in_specs=(spec_nt, spec_nt, spec_nt, spec_nc),
+                       out_specs=spec_nc)
+    return fn(gl, q, w, V)

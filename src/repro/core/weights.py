@@ -1,0 +1,202 @@
+"""SWLC weight assignments (q, w) — paper Appendix B.
+
+Each assignment maps routed leaf codes + the ensemble context θ to per
+(sample, tree) scalar weights.  ``query_weights`` builds q (first argument /
+query role), ``reference_weights`` builds w (second argument / reference
+role).  Symmetric kernels use q == w.
+
+All functions return (N, T) float64 arrays; zeros are *structural* (they are
+dropped from the sparse factors, which is where e.g. the OOB/GAP kernels get
+their extra scalability — paper Remark 3.8 / Fig 4.2 middle).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Type
+
+import numpy as np
+
+from .context import EnsembleContext
+
+__all__ = ["WeightAssignment", "Original", "KeRF", "SeparableOOB", "RFGAP",
+           "InstanceHardness", "Boosted", "get_assignment", "ASSIGNMENTS"]
+
+
+class WeightAssignment:
+    """Base class. ``train_only`` weights need θ entries defined only for
+    training samples (bootstrap info); OOS queries then use ``oos_query``."""
+
+    name: str = "base"
+    symmetric: bool = True
+
+    def __init__(self, ctx: EnsembleContext):
+        self.ctx = ctx
+
+    # -- training-sample weights ------------------------------------------------
+    def query_weights(self, leaves: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def reference_weights(self, leaves: np.ndarray) -> np.ndarray:
+        return self.query_weights(leaves)
+
+    # -- out-of-sample query weights --------------------------------------------
+    def oos_query_weights(self, leaves: np.ndarray) -> np.ndarray:
+        """Weights for unseen query samples (no bootstrap info). Default:
+        same rule as training queries where that rule only uses leaf-level θ."""
+        return self.query_weights(leaves)
+
+    # -- diagonal convention ----------------------------------------------------
+    diagonal: Optional[float] = None   # None -> leave as computed
+
+    def _mass(self, leaves: np.ndarray, inbag: bool = False) -> np.ndarray:
+        gl = self.ctx.global_leaves(leaves)
+        m = self.ctx.leaf_mass_inbag if inbag else self.ctx.leaf_mass
+        return m[gl]
+
+
+class Original(WeightAssignment):
+    """Breiman: q = w = 1/sqrt(T)  (B.1)."""
+    name = "original"
+    symmetric = True
+
+    def query_weights(self, leaves: np.ndarray) -> np.ndarray:
+        n, T = leaves.shape
+        return np.full((n, T), 1.0 / np.sqrt(T))
+
+
+class KeRF(WeightAssignment):
+    """KeRF: q = w = 1/sqrt(T * M(leaf))  (B.2)."""
+    name = "kerf"
+    symmetric = True
+
+    def query_weights(self, leaves: np.ndarray) -> np.ndarray:
+        T = leaves.shape[1]
+        M = np.maximum(self._mass(leaves), 1.0)
+        return 1.0 / np.sqrt(T * M)
+
+
+class SeparableOOB(WeightAssignment):
+    """P̃_oob: q = w = o_t(x) * sqrt(T) / S(x)  (Appendix G).
+
+    Training-only bootstrap info; OOS queries are treated as "always OOB"
+    (an unseen sample is out-of-bag for every tree): q_oos = 1/sqrt(T).
+    Diagonal is set to 1 by convention (Remark G.2).
+    """
+    name = "oob"
+    symmetric = True
+    diagonal = 1.0
+
+    def query_weights(self, leaves: np.ndarray) -> np.ndarray:
+        ctx = self.ctx
+        assert ctx.oob is not None, "OOB kernel needs a bootstrapped forest"
+        if leaves.shape[0] != ctx.n_train:
+            raise ValueError("training weights requested for non-training batch")
+        T = leaves.shape[1]
+        S = np.maximum(ctx.oob_count.astype(np.float64), 1.0)
+        return ctx.oob.T.astype(np.float64) * (np.sqrt(T) / S)[:, None]
+
+    def oos_query_weights(self, leaves: np.ndarray) -> np.ndarray:
+        n, T = leaves.shape
+        return np.full((n, T), 1.0 / np.sqrt(T))
+
+
+class RFGAP(WeightAssignment):
+    """RF-GAP: q_t(x) = o_t(x)/S(x),  w_t(x) = c_t(x)/M_inbag(leaf_t(x))  (B.4).
+
+    Asymmetric; q is OOB-gated (query side), w is in-bag mass-normalized
+    (reference side).  OOS queries: every tree counts, q_oos = 1/T.
+    The natural diagonal is 0 (a sample is never simultaneously OOB and
+    in-bag in the same tree).
+    """
+    name = "gap"
+    symmetric = False
+
+    def query_weights(self, leaves: np.ndarray) -> np.ndarray:
+        ctx = self.ctx
+        assert ctx.oob is not None, "RF-GAP needs a bootstrapped forest"
+        if leaves.shape[0] != ctx.n_train:
+            raise ValueError("training weights requested for non-training batch")
+        S = np.maximum(ctx.oob_count.astype(np.float64), 1.0)
+        return ctx.oob.T.astype(np.float64) / S[:, None]
+
+    def reference_weights(self, leaves: np.ndarray) -> np.ndarray:
+        ctx = self.ctx
+        M = np.maximum(self._mass(leaves, inbag=True), 1.0)
+        return ctx.inbag.T.astype(np.float64) / M
+
+    def oos_query_weights(self, leaves: np.ndarray) -> np.ndarray:
+        n, T = leaves.shape
+        return np.full((n, T), 1.0 / T)
+
+
+class InstanceHardness(WeightAssignment):
+    """RFProxIH: q = 1/T, w_t(x) = 1 - kDN_t(x)  (B.5).
+
+    kDN_t is the fraction of k nearest neighbours of x — computed in the
+    subspace of features split on by tree t — that disagree with x's label.
+    Deviation from the paper's source ([7]): we use the tree-level split-
+    feature set rather than per-path sets, and subsample reference points for
+    the kNN query (documented in DESIGN.md §7).  This keeps the weight map
+    O(N·T·k_ref·d_t) instead of quadratic.
+    """
+    name = "ih"
+    symmetric = False
+    k = 5
+    max_ref = 2048
+
+    def query_weights(self, leaves: np.ndarray) -> np.ndarray:
+        n, T = leaves.shape
+        return np.full((n, T), 1.0 / T)
+
+    def reference_weights(self, leaves: np.ndarray) -> np.ndarray:
+        ctx = self.ctx
+        assert ctx.X is not None and ctx.y is not None
+        rng = np.random.default_rng(0)
+        n, T = leaves.shape
+        X, y = ctx.X, ctx.y
+        ref = rng.choice(ctx.n_train, min(self.max_ref, ctx.n_train), replace=False)
+        out = np.empty((n, T))
+        for t in range(T):
+            feats = ctx.tree_features[t]
+            if len(feats) == 0:
+                out[:, t] = 1.0
+                continue
+            A = X[:, feats]
+            B = ctx.X[ref][:, feats]
+            d2 = ((A[:, None, :] - B[None, :, :]) ** 2).sum(-1) if n * len(ref) * len(feats) < 5e7 \
+                else _chunked_d2(A, B)
+            nn = np.argpartition(d2, self.k, axis=1)[:, :self.k]
+            disagree = (ctx.y[ref][nn] != y[:, None]).mean(1)
+            out[:, t] = 1.0 - disagree
+        return out
+
+
+def _chunked_d2(A: np.ndarray, B: np.ndarray, chunk: int = 512) -> np.ndarray:
+    out = np.empty((A.shape[0], B.shape[0]))
+    b2 = (B ** 2).sum(1)
+    for i in range(0, A.shape[0], chunk):
+        a = A[i:i + chunk]
+        out[i:i + chunk] = (a ** 2).sum(1)[:, None] - 2 * a @ B.T + b2[None, :]
+    return out
+
+
+class Boosted(WeightAssignment):
+    """Tree-weighted (GBT): q = w = sqrt(w_t / Σ w_s)  (B.6)."""
+    name = "boosted"
+    symmetric = True
+
+    def query_weights(self, leaves: np.ndarray) -> np.ndarray:
+        n, T = leaves.shape
+        tw = self.ctx.tree_weights
+        tw = tw / max(tw.sum(), 1e-300)
+        return np.broadcast_to(np.sqrt(tw)[None, :], (n, T)).copy()
+
+
+ASSIGNMENTS: Dict[str, Type[WeightAssignment]] = {
+    c.name: c for c in [Original, KeRF, SeparableOOB, RFGAP, InstanceHardness, Boosted]
+}
+
+
+def get_assignment(name: str, ctx: EnsembleContext) -> WeightAssignment:
+    if name not in ASSIGNMENTS:
+        raise KeyError(f"unknown kernel_method {name!r}; have {sorted(ASSIGNMENTS)}")
+    return ASSIGNMENTS[name](ctx)

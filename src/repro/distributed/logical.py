@@ -1,0 +1,102 @@
+"""Logical-axis sharding hints for activations.
+
+``shard_hint(x, "batch", "sp", None)`` constrains an activation to the
+ambient production mesh using logical axis names:
+
+  batch -> ("pod", "data")     sp -> "model" (sequence parallel)
+  tp    -> "model"             None -> unsharded
+
+Hints are NO-OPs when no mesh is active (unit tests, single-device runs) or
+when the dimension extent doesn't divide the target axis size — so model
+code can hint unconditionally and stay correct for every arch (minicpm's 36
+heads, hymba's 25, granite-moe's 40 experts simply skip the constraint).
+
+Set the mesh with ``axis_env(mesh)`` (the dry-run and train loop do this).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["axis_env", "shard_hint", "current_mesh", "perf_env", "get_opt",
+           "tp_size_of"]
+
+_state = threading.local()
+
+# perf toggles (see EXPERIMENTS.md §Perf): compute-side padding that buys
+# clean tensor-parallel sharding for head/expert counts that don't divide
+# the model axis.  Defaults ON; the baseline rows were measured with a
+# `perf_env(head_pad=False, expert_pad=False)` override.
+_DEFAULT_OPTS = {"head_pad": True, "expert_pad": True}
+
+
+@contextlib.contextmanager
+def axis_env(mesh: Mesh):
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+
+
+@contextlib.contextmanager
+def perf_env(**opts):
+    prev = getattr(_state, "opts", None)
+    merged = dict(_DEFAULT_OPTS)
+    if prev:
+        merged.update(prev)
+    merged.update(opts)
+    _state.opts = merged
+    try:
+        yield
+    finally:
+        _state.opts = prev
+
+
+def get_opt(name: str):
+    opts = getattr(_state, "opts", None) or _DEFAULT_OPTS
+    return opts.get(name, _DEFAULT_OPTS.get(name))
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def tp_size_of() -> int:
+    mesh = current_mesh()
+    return int(mesh.shape.get("model", 1)) if mesh is not None else 1
+
+
+def _resolve(name, mesh):
+    if name is None:
+        return None, 1
+    if name == "batch":
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return (axes if len(axes) > 1 else axes[0]), n
+    if name in ("tp", "sp"):
+        return "model", mesh.shape.get("model", 1)
+    raise KeyError(name)
+
+
+def shard_hint(x: jax.Array, *logical_axes) -> jax.Array:
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    spec = []
+    for dim, name in zip(x.shape, logical_axes):
+        ax, size = _resolve(name, mesh)
+        if ax is None or size <= 1 or dim % size != 0 or dim < size:
+            spec.append(None)
+        else:
+            spec.append(ax)
+    with mesh:
+        return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,181 @@
+"""Sharding rules: parameter / input / cache PartitionSpecs per architecture.
+
+Strategy (DESIGN.md §5):
+  - batch over ("pod", "data"); params FSDP(ZeRO-3)-sharded over the same
+    axes on a large non-TP dim; tensor-parallel over "model" on heads /
+    d_ff / vocab / experts / d_inner.
+  - Head counts that don't divide the model axis (minicpm H=36, hymba H=25,
+    paligemma H=8, granite-moe E=40) fall back to the first dimension that
+    *does* divide — head_dim, expert d_ff, etc. — instead of relying on
+    uneven-shard padding.
+  - decode KV caches shard their *sequence* dim over "model" (distributed
+    flash-decode: GSPMD turns the softmax over the sharded axis into the
+    max/sum collectives), which is what makes 500k-token caches and MQA
+    (kv=1) caches fit per chip.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "opt_state_specs",
+           "with_named_sharding", "tp_size"]
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _axes(mesh: Mesh) -> Tuple[Tuple[str, ...], str]:
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return fsdp, "model"
+
+
+def _fsdp_size(mesh: Mesh) -> int:
+    fsdp, _ = _axes(mesh)
+    n = 1
+    for a in fsdp:
+        n *= mesh.shape[a]
+    return n
+
+
+def _pick(shape, idx_candidates, size) -> Optional[int]:
+    """First candidate dim whose extent divides `size`."""
+    for i in idx_candidates:
+        if shape[i] % size == 0 and shape[i] >= size:
+            return i
+    return None
+
+
+def _leaf_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf, keyed on its tree path.
+
+    All layer leaves carry a leading stacked-L axis (never sharded).
+    """
+    fsdp, tp = _axes(mesh)
+    tps = tp_size(mesh)
+    fs = _fsdp_size(mesh)
+    spec = [None] * len(shape)
+    stacked = path.startswith("layers/")
+    off = 1 if stacked else 0
+
+    def assign(i, ax):
+        if i is not None:
+            spec[i] = ax
+
+    name = path.split("/")[-1]
+    group = path.split("/")[-2] if "/" in path else ""
+
+    if name == "embed":
+        assign(_pick(shape, [0], tps), tp)                 # vocab
+        assign(_pick(shape, [1], fs), fsdp)                # d_model
+    elif name == "lm_head":
+        assign(_pick(shape, [1], tps), tp)                 # vocab
+        assign(_pick(shape, [0], fs), fsdp)
+    elif name in ("wq", "wk", "wv"):                       # (L, D, H|KV, hd)
+        # heads over model ONLY when divisible; never shard head_dim —
+        # hd-sharded K/V forces the partitioner into full-tensor remat
+        # inside attention (observed: 155GB temps on granite-8b).
+        assign(_pick(shape, [off + 1], tps), tp)
+        assign(_pick(shape, [off + 0], fs), fsdp)
+    elif name == "wo":                                     # (L, H, hd, D)
+        assign(_pick(shape, [off + 0], tps), tp)
+        assign(_pick(shape, [off + 2], fs), fsdp)
+    elif group == "mlp" and name in ("w_gate", "w_up"):    # (L, D, F)
+        assign(_pick(shape, [off + 1], tps), tp)
+        assign(_pick(shape, [off + 0], fs), fsdp)
+    elif group == "mlp" and name == "w_down":              # (L, F, D)
+        assign(_pick(shape, [off + 0], tps), tp)
+        assign(_pick(shape, [off + 1], fs), fsdp)
+    elif name == "router":                                 # (L, D, E)
+        assign(_pick(shape, [off + 0], fs), fsdp)
+    elif group == "moe" and name in ("w_gate", "w_up"):    # (L, E, D, Fe)
+        i = _pick(shape, [off + 0, off + 2], tps)
+        assign(i, tp)
+        assign(_pick(shape, [off + 1], fs), fsdp)
+    elif group == "moe" and name == "w_down":              # (L, E, Fe, D)
+        i = _pick(shape, [off + 0, off + 1], tps)
+        assign(i, tp)
+        assign(_pick(shape, [off + 2], fs), fsdp)
+    elif name == "in_proj":                                # (L, D, Z)
+        assign(_pick(shape, [off + 1], tps), tp)
+        assign(_pick(shape, [off + 0], fs), fsdp)
+    elif name == "out_proj":                               # (L, di, D)
+        assign(_pick(shape, [off + 0], tps), tp)
+        assign(_pick(shape, [off + 1], fs), fsdp)
+    # norms / biases / conv / A_log / dt / out_norm: replicated
+    return P(*spec)
+
+
+def _tree_paths_specs(tree: Any, mesh: Mesh) -> Any:
+    def fn(kp, leaf):
+        path = "/".join(str(getattr(k, "key", k)) for k in kp)
+        return _leaf_spec(path, leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(fn, tree)
+
+
+def param_specs(params: Any, mesh: Mesh) -> Any:
+    return _tree_paths_specs(params, mesh)
+
+
+def opt_state_specs(params: Any, mesh: Mesh) -> Any:
+    """Adam m/v mirror the param sharding."""
+    return _tree_paths_specs(params, mesh)
+
+
+def batch_specs(mesh: Mesh, with_image: bool = False) -> Dict[str, P]:
+    b = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    out = {"tokens": P(b, None), "labels": P(b, None)}
+    if with_image:
+        out["image_embed"] = P(b, None, None)
+    return out
+
+
+def _batch_axes_for(mesh: Mesh, dim: int):
+    """Batch-sharding axes that evenly divide `dim` (long_500k has B=1)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if axes and dim % n == 0 and dim >= n:
+        return axes if len(axes) > 1 else axes[0]
+    # try data alone (pod dropped)
+    if "data" in mesh.axis_names and dim % mesh.shape["data"] == 0 \
+            and dim >= mesh.shape["data"]:
+        return "data"
+    return None
+
+
+def cache_specs(cfg: ArchConfig, cache: Any, mesh: Mesh) -> Any:
+    """Decode cache specs: batch→data axes, seq→model (flash-decode)."""
+    tps = tp_size(mesh)
+
+    def fn(kp, leaf):
+        name = str(getattr(kp[-1], "key", kp[-1]))
+        shape = leaf.shape
+        b = _batch_axes_for(mesh, shape[1]) if len(shape) > 1 else None
+        if name in ("k", "v", "k_swa", "v_swa", "k_glob", "v_glob"):
+            # (L, B, S, KV, hd): seq over model if divisible
+            seq_ok = shape[2] % tps == 0 and shape[2] >= tps
+            return P(None, b, "model" if seq_ok else None, None, None)
+        if name == "conv":
+            return P(None, b, None, None)
+        if name == "ssm":
+            # (L, B, H, hd, state)
+            h_ok = shape[2] % tps == 0 and shape[2] >= tps
+            return P(None, b, "model" if h_ok else None, None, None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(fn, cache)
+
+
+def with_named_sharding(tree: Any, specs: Any, mesh: Mesh) -> Any:
+    """Attach NamedShardings to a ShapeDtypeStruct pytree (dry-run inputs)."""
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        tree, specs)

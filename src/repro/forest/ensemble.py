@@ -1,0 +1,200 @@
+"""Forest ensembles: RandomForest, ExtraTrees, GradientBoostedTrees.
+
+These are the "ensemble context" providers of the paper (§2.2): they expose
+the topology `T` (trees, routing) plus the context `θ` (in-bag multiplicities,
+OOB masks, leaf masses, tree weights) that the SWLC weight assignments in
+``repro.core.weights`` consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from .bootstrap import bootstrap_counts, oob_mask
+from .trees import Tree, TreeArrays, route_forest_numpy
+from .training import Binner, TreeParams, fit_tree_binned
+
+__all__ = ["RandomForest", "ExtraTrees", "GradientBoostedTrees", "BaseForest"]
+
+
+@dataclasses.dataclass
+class BaseForest:
+    n_trees: int = 100
+    max_depth: int = 64
+    min_samples_leaf: int = 1
+    min_samples_split: int = 2
+    max_features: Optional[str] = "sqrt"
+    n_bins: int = 64
+    bootstrap: bool = True
+    task: str = "classification"
+    seed: int = 0
+    splitter: str = "best"
+
+    # fitted state
+    trees_: Optional[List[Tree]] = None
+    inbag_: Optional[np.ndarray] = None          # (T, N) int32
+    n_classes_: int = 0
+    binner_: Optional[Binner] = None
+    X_: Optional[np.ndarray] = None
+    y_: Optional[np.ndarray] = None
+    tree_weights_: Optional[np.ndarray] = None   # (T,) — for boosted proximities
+
+    def _params(self) -> TreeParams:
+        return TreeParams(
+            task=self.task, n_classes=self.n_classes_, max_depth=self.max_depth,
+            min_samples_leaf=self.min_samples_leaf,
+            min_samples_split=self.min_samples_split,
+            max_features=self.max_features, n_bins=self.n_bins,
+            splitter=self.splitter)
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "BaseForest":
+        rng = np.random.default_rng(self.seed)
+        X = np.asarray(X, dtype=np.float64)
+        self.X_, self.y_ = X, y
+        if self.task == "classification":
+            y = np.asarray(y, dtype=np.int64)
+            self.n_classes_ = int(y.max()) + 1
+        else:
+            y = np.asarray(y, dtype=np.float64)
+            self.n_classes_ = 0
+        self.binner_ = Binner(X, self.n_bins, rng)
+        Xb = self.binner_.transform(X)
+        self.inbag_ = bootstrap_counts(len(X), self.n_trees, rng, self.bootstrap)
+        params = self._params()
+        self.trees_ = []
+        for t in range(self.n_trees):
+            w = self.inbag_[t]
+            sel = np.nonzero(w)[0]
+            tr = fit_tree_binned(Xb[sel], y[sel], w[sel].astype(np.float64),
+                                 params, rng, self.binner_)
+            self.trees_.append(tr)
+        self.tree_weights_ = np.ones(self.n_trees, dtype=np.float64)
+        return self
+
+    # ----- routing / prediction -----
+    def apply(self, X: np.ndarray) -> np.ndarray:
+        """(N, T) within-tree leaf ids."""
+        return route_forest_numpy(self.trees_, np.asarray(X, dtype=np.float64))
+
+    def tree_arrays(self) -> TreeArrays:
+        return TreeArrays.from_trees(self.trees_)
+
+    def predict_proba(self, X: np.ndarray) -> np.ndarray:
+        leaves = self.apply(X)
+        out = np.zeros((len(X), self.n_classes_))
+        for t, tr in enumerate(self.trees_):
+            vals = tr.leaf_values()                       # (L_t, C) counts
+            p = vals / np.maximum(vals.sum(1, keepdims=True), 1e-12)
+            out += p[leaves[:, t]]
+        return out / len(self.trees_)
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        if self.task == "classification":
+            return self.predict_proba(X).argmax(1)
+        leaves = self.apply(X)
+        out = np.zeros(len(X))
+        for t, tr in enumerate(self.trees_):
+            out += tr.leaf_values()[leaves[:, t], 1]      # (count, mean)
+        return out / len(self.trees_)
+
+    def oob_predict(self, X: Optional[np.ndarray] = None) -> np.ndarray:
+        """Forest OOB predictions on the training set (classification)."""
+        leaves = self.apply(self.X_ if X is None else X)
+        oob = oob_mask(self.inbag_)                        # (T, N)
+        probs = np.zeros((leaves.shape[0], self.n_classes_))
+        denom = np.zeros(leaves.shape[0])
+        for t, tr in enumerate(self.trees_):
+            vals = tr.leaf_values()
+            p = vals / np.maximum(vals.sum(1, keepdims=True), 1e-12)
+            m = oob[t].astype(np.float64)
+            probs += p[leaves[:, t]] * m[:, None]
+            denom += m
+        return probs / np.maximum(denom[:, None], 1e-12)
+
+
+class RandomForest(BaseForest):
+    pass
+
+
+@dataclasses.dataclass
+class ExtraTrees(BaseForest):
+    bootstrap: bool = False
+    splitter: str = "random"
+
+
+@dataclasses.dataclass
+class GradientBoostedTrees(BaseForest):
+    """Squared-loss (regression) / logistic (binary) gradient boosting.
+
+    Per-tree contribution weights ``tree_weights_`` record the training-loss
+    improvement of each stage (clamped at >= 0), the empirical weighting used
+    by boosted proximities (Tan et al. 2020; paper §B.6).
+    """
+    learning_rate: float = 0.1
+    bootstrap: bool = False
+    max_features: Optional[str] = None
+    max_depth: int = 6
+
+    base_score_: float = 0.0
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "GradientBoostedTrees":
+        rng = np.random.default_rng(self.seed)
+        X = np.asarray(X, dtype=np.float64)
+        self.X_, self.y_ = X, y
+        binary = self.task == "classification"
+        yf = np.asarray(y, dtype=np.float64)
+        if binary:
+            assert set(np.unique(yf)) <= {0.0, 1.0}, "GBT classification is binary"
+            p0 = np.clip(yf.mean(), 1e-6, 1 - 1e-6)
+            self.base_score_ = float(np.log(p0 / (1 - p0)))
+            self.n_classes_ = 2
+        else:
+            self.base_score_ = float(yf.mean())
+            self.n_classes_ = 0
+        self.binner_ = Binner(X, self.n_bins, rng)
+        Xb = self.binner_.transform(X)
+        self.inbag_ = bootstrap_counts(len(X), self.n_trees, rng, self.bootstrap)
+
+        params = self._params()
+        params.task = "regression"   # boosting fits residuals
+        params.n_classes = 0
+        F = np.full(len(X), self.base_score_)
+        self.trees_ = []
+        tw = []
+
+        def loss(F):
+            if binary:
+                return float(np.mean(np.logaddexp(0.0, F) - yf * F))
+            return float(np.mean((yf - F) ** 2))
+
+        prev = loss(F)
+        for t in range(self.n_trees):
+            resid = (yf - 1.0 / (1.0 + np.exp(-F))) if binary else (yf - F)
+            w = self.inbag_[t]
+            sel = np.nonzero(w)[0]
+            tr = fit_tree_binned(Xb[sel], resid[sel], w[sel].astype(np.float64),
+                                 params, rng, self.binner_)
+            self.trees_.append(tr)
+            leaves = route_forest_numpy([tr], X)[:, 0]
+            F = F + self.learning_rate * tr.leaf_values()[leaves, 1]
+            cur = loss(F)
+            tw.append(max(prev - cur, 0.0))
+            prev = cur
+        tw = np.asarray(tw)
+        self.tree_weights_ = tw / max(tw.sum(), 1e-12)
+        return self
+
+    def decision_function(self, X: np.ndarray) -> np.ndarray:
+        leaves = self.apply(X)
+        F = np.full(len(X), self.base_score_)
+        for t, tr in enumerate(self.trees_):
+            F += self.learning_rate * tr.leaf_values()[leaves[:, t], 1]
+        return F
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        F = self.decision_function(X)
+        if self.task == "classification":
+            return (F > 0).astype(np.int64)
+        return F

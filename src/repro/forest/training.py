@@ -1,0 +1,310 @@
+"""Level-wise histogram CART training (numpy fast path).
+
+This is the CPU trainer used for the paper-scale experiments (hundreds of
+thousands of samples).  It follows the LightGBM/sklearn-HistGradientBoosting
+design: features are pre-binned to ``n_bins`` quantile bins, and at each tree
+level the class/moment histograms of *all* active nodes are accumulated in one
+vectorized ``np.bincount`` over a flattened (node, feature, bin[, class])
+index.  Total histogram work per level is ``O(N_inbag * d)`` independent of
+the node count, so growing to purity costs ``O(N d depth)`` per tree — the
+``O(N T h̄)`` training term of the paper's §3.3.
+
+The TPU-native counterpart (one-hot × matmul histograms) lives in
+``repro/kernels/histogram``; this module is the reference/production CPU path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .trees import Tree
+
+__all__ = ["TreeParams", "Binner", "fit_tree", "fit_tree_binned"]
+
+_HIST_BUDGET = 1 << 26  # max float64 elements per histogram chunk (~512MB)
+
+
+@dataclasses.dataclass
+class TreeParams:
+    task: str = "classification"      # "classification" | "regression"
+    n_classes: int = 2
+    max_depth: int = 64
+    min_samples_leaf: int = 1
+    min_samples_split: int = 2
+    max_features: Optional[str] = "sqrt"   # "sqrt" | "log2" | None (all) | int
+    n_bins: int = 64
+    splitter: str = "best"            # "best" (CART) | "random" (ExtraTrees)
+
+    def n_feature_subset(self, d: int) -> int:
+        mf = self.max_features
+        if mf is None:
+            return d
+        if mf == "sqrt":
+            return max(1, int(np.sqrt(d)))
+        if mf == "log2":
+            return max(1, int(np.log2(d)))
+        return max(1, min(int(mf), d))
+
+
+class Binner:
+    """Quantile pre-binning of a feature matrix to small integer codes."""
+
+    def __init__(self, X: np.ndarray, n_bins: int = 64, rng: Optional[np.random.Generator] = None):
+        n, d = X.shape
+        rng = rng or np.random.default_rng(0)
+        sub = X if n <= 200_000 else X[rng.choice(n, 200_000, replace=False)]
+        qs = np.linspace(0, 1, n_bins + 1)[1:-1]
+        self.edges: List[np.ndarray] = []
+        for f in range(d):
+            e = np.unique(np.quantile(sub[:, f], qs))
+            # Drop the global max as an edge (it would create an empty bin).
+            mx = sub[:, f].max()
+            e = e[e < mx]
+            self.edges.append(e.astype(np.float64))
+        self.n_bins = max(2, max(len(e) for e in self.edges) + 1)
+
+    def transform(self, X: np.ndarray) -> np.ndarray:
+        """Map raw features to bin codes; bin(x) <= b  <=>  x <= edges[b]."""
+        n, d = X.shape
+        out = np.empty((n, d), dtype=np.int16)
+        for f in range(d):
+            out[:, f] = np.searchsorted(self.edges[f], X[:, f], side="left")
+        return out
+
+    def threshold(self, f: int, b: int) -> float:
+        e = self.edges[f]
+        return float(e[min(b, len(e) - 1)]) if len(e) else np.inf
+
+
+def _node_values(y: np.ndarray, w: np.ndarray, params: TreeParams) -> np.ndarray:
+    if params.task == "classification":
+        return np.bincount(y, weights=w, minlength=params.n_classes).astype(np.float32)
+    tot = w.sum()
+    return np.array([tot, (w * y).sum() / max(tot, 1e-12)], dtype=np.float32)
+
+
+def fit_tree(X: np.ndarray, y: np.ndarray, w: np.ndarray, params: TreeParams,
+             rng: np.random.Generator, binner: Optional[Binner] = None) -> Tree:
+    binner = binner or Binner(X, params.n_bins, rng)
+    Xb = binner.transform(X)
+    return fit_tree_binned(Xb, y, w, params, rng, binner)
+
+
+def fit_tree_binned(Xb: np.ndarray, y: np.ndarray, w: np.ndarray, params: TreeParams,
+                    rng: np.random.Generator, binner: Binner) -> Tree:
+    """Grow one tree level-wise on pre-binned features.
+
+    ``w`` are per-sample weights (bootstrap multiplicities); samples with
+    ``w == 0`` must be excluded by the caller (they are OOB).
+    """
+    n, d = Xb.shape
+    n_bins = binner.n_bins
+    cls = params.task == "classification"
+    C = params.n_classes if cls else 3  # regression channels: (w, wy, wy^2)
+
+    # Growing node store (parallel lists; converted to arrays at the end).
+    feat_l: List[int] = [-2]          # -2 = unresolved, -1 = leaf
+    thr_l: List[float] = [np.inf]
+    left_l: List[int] = [0]
+    right_l: List[int] = [0]
+    val_l: List[np.ndarray] = [_node_values(y, w, params)]
+    cnt_l: List[float] = [float(w.sum())]
+    depth_l: List[int] = [0]
+
+    sample_node = np.zeros(n, dtype=np.int64)
+    active = [0]                       # node ids to try splitting this level
+    yc = y.astype(np.int64) if cls else y.astype(np.float64)
+    wf = w.astype(np.float64)
+    depth = 0
+
+    while active and depth < params.max_depth:
+        depth += 1
+        act = np.asarray(active, dtype=np.int64)
+        n_act = len(act)
+        # `act` is ascending by construction (children appended in id order).
+        pos = np.searchsorted(act, sample_node)
+        pos_c = np.minimum(pos, n_act - 1)
+        in_act = act[pos_c] == sample_node
+        idx_samples = np.nonzero(in_act)[0]
+        local = pos_c[idx_samples]
+
+        # ---- histogram accumulation, chunked over active nodes ----
+        per_node_elems = d * n_bins * C
+        chunk_nodes = max(1, int(_HIST_BUDGET // max(per_node_elems, 1)))
+        best_gain = np.full(n_act, -np.inf)
+        best_f = np.zeros(n_act, dtype=np.int64)
+        best_b = np.zeros(n_act, dtype=np.int64)
+        node_tot = np.zeros((n_act, C))
+
+        order = np.argsort(local, kind="stable")
+        idx_sorted = idx_samples[order]
+        local_sorted = local[order]
+        bounds = np.searchsorted(local_sorted, np.arange(n_act + 1))
+
+        for c0 in range(0, n_act, chunk_nodes):
+            c1 = min(c0 + chunk_nodes, n_act)
+            s0, s1 = bounds[c0], bounds[c1]
+            if s1 == s0:
+                continue
+            rows = idx_sorted[s0:s1]
+            loc = local_sorted[s0:s1] - c0
+            nb = Xb[rows].astype(np.int64)                     # (m, d)
+            base = (loc[:, None] * d + np.arange(d)[None, :]) * n_bins + nb  # (m, d)
+            m = len(rows)
+            size = (c1 - c0) * d * n_bins
+            if cls:
+                flat = base * C + yc[rows][:, None]
+                hist = np.bincount(flat.ravel(), weights=np.repeat(wf[rows], d),
+                                   minlength=size * C).reshape(c1 - c0, d, n_bins, C)
+            else:
+                fr = base.ravel()
+                ww = np.repeat(wf[rows], d)
+                wy = np.repeat(wf[rows] * yc[rows], d)
+                wy2 = np.repeat(wf[rows] * yc[rows] ** 2, d)
+                hist = np.stack([
+                    np.bincount(fr, weights=ww, minlength=size).reshape(c1 - c0, d, n_bins),
+                    np.bincount(fr, weights=wy, minlength=size).reshape(c1 - c0, d, n_bins),
+                    np.bincount(fr, weights=wy2, minlength=size).reshape(c1 - c0, d, n_bins),
+                ], axis=-1)
+
+            g, f_idx, b_idx, tot = _best_splits(hist, params, rng, d, n_bins, cls)
+            best_gain[c0:c1] = g
+            best_f[c0:c1] = f_idx
+            best_b[c0:c1] = b_idx
+            node_tot[c0:c1] = tot
+
+        # ---- apply splits / finalize leaves ----
+        next_active: List[int] = []
+        split_mask = np.zeros(n_act, dtype=bool)
+        child_of = np.zeros((n_act, 2), dtype=np.int64)
+        for i, a in enumerate(act):
+            nw = node_tot[i, 0] if not cls else node_tot[i].sum()
+            pure = (cls and (node_tot[i].max() >= nw - 1e-9)) or \
+                   (not cls and node_tot[i, 2] - node_tot[i, 1] ** 2 / max(nw, 1e-12) <= 1e-12)
+            if (best_gain[i] <= 1e-12 or nw < params.min_samples_split
+                    or pure or depth >= params.max_depth):
+                feat_l[a] = -1
+                continue
+            f, b = int(best_f[i]), int(best_b[i])
+            feat_l[a] = f
+            thr_l[a] = binner.threshold(f, b)
+            lid, rid = len(feat_l), len(feat_l) + 1
+            left_l[a], right_l[a] = lid, rid
+            for _ in range(2):
+                feat_l.append(-2)
+                thr_l.append(np.inf)
+                left_l.append(0)
+                right_l.append(0)
+                val_l.append(None)  # filled below
+                cnt_l.append(0.0)
+                depth_l.append(depth)
+            split_mask[i] = True
+            child_of[i] = (lid, rid)
+            next_active += [lid, rid]
+
+        if split_mask.any():
+            smask = split_mask[local]
+            rows = idx_samples[smask]
+            li = local[smask]
+            f_s = best_f[li]
+            go_left = Xb[rows, f_s] <= best_b[li]
+            sample_node[rows] = np.where(go_left, child_of[li, 0], child_of[li, 1])
+            # child payloads, vectorized: pair index per split node, side bit.
+            split_ids = np.nonzero(split_mask)[0]
+            pair_rank = np.full(n_act, -1, dtype=np.int64)
+            pair_rank[split_ids] = np.arange(len(split_ids))
+            child_slot = 2 * pair_rank[li] + (~go_left).astype(np.int64)
+            n_child = 2 * len(split_ids)
+            if cls:
+                cvals = np.bincount(child_slot * C + yc[rows], weights=wf[rows],
+                                    minlength=n_child * C).reshape(n_child, C)
+            else:
+                cw = np.bincount(child_slot, weights=wf[rows], minlength=n_child)
+                cwy = np.bincount(child_slot, weights=wf[rows] * yc[rows], minlength=n_child)
+                cvals = np.stack([cw, cwy / np.maximum(cw, 1e-12)], axis=1)
+            ccnt = cvals.sum(1) if cls else cvals[:, 0]
+            for p, i in enumerate(split_ids):
+                for side in (0, 1):
+                    cid = int(child_of[i, side])
+                    val_l[cid] = cvals[2 * p + side].astype(np.float32)
+                    cnt_l[cid] = float(ccnt[2 * p + side])
+        active = next_active
+
+    # Any still-unresolved nodes (depth cap) become leaves.
+    feature = np.asarray([(-1 if f == -2 else f) for f in feat_l], dtype=np.int32)
+    leaf_id = np.full(len(feature), -1, dtype=np.int32)
+    leaf_id[feature == -1] = np.arange(int((feature == -1).sum()), dtype=np.int32)
+    return Tree(
+        feature=feature,
+        threshold=np.asarray(thr_l, dtype=np.float32),
+        left=np.asarray(left_l, dtype=np.int32),
+        right=np.asarray(right_l, dtype=np.int32),
+        leaf_id=leaf_id,
+        value=np.stack([v if v is not None
+                        else np.zeros(params.n_classes if cls else 2, np.float32)
+                        for v in val_l]),
+        n_node_samples=np.asarray(np.round(cnt_l), dtype=np.int32),
+        depth=max(depth_l) + 1 if depth_l else 1,
+    )
+
+
+def _best_splits(hist: np.ndarray, params: TreeParams, rng: np.random.Generator,
+                 d: int, n_bins: int, cls: bool):
+    """Pick the best (feature, bin) split per node from histograms.
+
+    hist: (nodes, d, bins, C).  Returns (gain, feature, bin, node_totals).
+    """
+    nodes = hist.shape[0]
+    # Early (wide) levels hold large counts -> float64 for split-score
+    # precision; deep levels hold tiny per-node counts -> float32 is exact
+    # enough and halves the bandwidth of the dominant reduction.
+    acc_dt = np.float64 if hist.size < (1 << 21) else np.float32
+    cum = np.cumsum(hist.astype(acc_dt), axis=2)       # left stats at split bin b
+    tot = cum[:, :, -1:, :]                            # (nodes, d, 1, C)
+    R = tot - cum
+    if cls:
+        nL = cum.sum(-1)
+        nR = R.sum(-1)
+        score = np.einsum("ndbc,ndbc->ndb", cum, cum) / np.maximum(nL, 1e-12)
+        score += np.einsum("ndbc,ndbc->ndb", R, R) / np.maximum(nR, 1e-12)
+        p0 = tot[:, 0, 0, :]
+        parent = (p0 ** 2).sum(-1) / np.maximum(p0.sum(-1), 1e-12)
+        gain = score - parent[:, None, None]
+        node_tot = p0.astype(np.float64)
+    else:
+        nL, nR = cum[..., 0], R[..., 0]
+        score = cum[..., 1] ** 2 / np.maximum(nL, 1e-12)
+        score += R[..., 1] ** 2 / np.maximum(nR, 1e-12)
+        parent = tot[..., 0, 1] ** 2 / np.maximum(tot[..., 0, 0], 1e-12)
+        gain = score - parent[:, :, None]
+        node_tot = tot[:, 0, 0, :].astype(np.float64)
+
+    valid = (nL >= params.min_samples_leaf) & (nR >= params.min_samples_leaf)
+    valid[:, :, -1] = False                       # last bin -> empty right side
+    gain = np.where(valid, gain, -np.inf)
+
+    if params.splitter == "random":
+        # ExtraTrees: one random valid bin per (node, feature).
+        u = rng.random((nodes, d, n_bins))
+        u = np.where(valid, u, -np.inf)
+        rb = u.argmax(axis=2)
+        gain = np.take_along_axis(gain, rb[:, :, None], axis=2)[:, :, 0]
+        bins_choice = rb
+    else:
+        bins_choice = gain.argmax(axis=2)
+        gain = np.take_along_axis(gain, bins_choice[:, :, None], axis=2)[:, :, 0]
+
+    # Per-node random feature subset (RF semantics).
+    k = params.n_feature_subset(d)
+    if k < d:
+        mask = np.zeros((nodes, d), dtype=bool)
+        cols = rng.random((nodes, d)).argsort(axis=1)[:, :k]
+        np.put_along_axis(mask, cols, True, axis=1)
+        gain = np.where(mask, gain, -np.inf)
+
+    f_best = gain.argmax(axis=1)
+    g_best = np.take_along_axis(gain, f_best[:, None], axis=1)[:, 0]
+    b_best = np.take_along_axis(bins_choice, f_best[:, None], axis=1)[:, 0]
+    return g_best, f_best, b_best, node_tot

@@ -1,0 +1,149 @@
+"""Flattened decision-tree structures and routing.
+
+Trees are stored as struct-of-arrays so that routing is a sequence of
+vectorized gather + compare + select steps (branch-free — the TPU-native
+formulation; see DESIGN.md §3).  A single :class:`Tree` holds one tree;
+:class:`TreeArrays` holds a whole ensemble padded to ``max_nodes`` so that
+routing can be ``vmap``-ed over trees in JAX and fed to the Pallas routing
+kernel.
+
+Conventions
+-----------
+- node 0 is the root.
+- ``feature[n] >= 0``  -> internal node splitting on that feature with
+  ``threshold[n]``; samples with ``x[f] <= thr`` go to ``left[n]`` else
+  ``right[n]``.
+- ``feature[n] == -1`` -> leaf; ``leaf_id[n]`` is the *within-tree* leaf
+  ordinal in ``[0, n_leaves)``; internal nodes have ``leaf_id == -1``.
+- ``value[n]`` stores the training prediction payload (class histogram row
+  or scalar mean) and ``n_node_samples[n]`` the in-node training count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["Tree", "TreeArrays", "route_tree", "route_forest_numpy"]
+
+
+@dataclasses.dataclass
+class Tree:
+    """One decision tree in flattened (struct-of-arrays) form."""
+
+    feature: np.ndarray        # (n_nodes,) int32, -1 for leaves
+    threshold: np.ndarray      # (n_nodes,) float32 (bin-edge value in raw feature units)
+    left: np.ndarray           # (n_nodes,) int32
+    right: np.ndarray          # (n_nodes,) int32
+    leaf_id: np.ndarray        # (n_nodes,) int32, -1 for internal
+    value: np.ndarray          # (n_nodes, value_dim) float32
+    n_node_samples: np.ndarray  # (n_nodes,) int32
+    depth: int = 0
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.feature.shape[0])
+
+    @property
+    def n_leaves(self) -> int:
+        return int((self.feature == -1).sum())
+
+    def leaf_nodes(self) -> np.ndarray:
+        """Node indices of leaves, ordered by ``leaf_id``."""
+        idx = np.nonzero(self.feature == -1)[0]
+        order = np.argsort(self.leaf_id[idx])
+        return idx[order].astype(np.int32)
+
+    def leaf_values(self) -> np.ndarray:
+        """(n_leaves, value_dim) prediction payloads ordered by leaf_id."""
+        return self.value[self.leaf_nodes()]
+
+    def leaf_counts(self) -> np.ndarray:
+        """(n_leaves,) training-sample counts per leaf, ordered by leaf_id."""
+        return self.n_node_samples[self.leaf_nodes()].astype(np.int64)
+
+
+def route_tree(tree: Tree, X: np.ndarray) -> np.ndarray:
+    """Route samples through one tree. Returns within-tree leaf ids (int32).
+
+    Vectorized over samples: each step gathers (feature, threshold, children)
+    at the current node for every sample and advances.  ``depth`` iterations.
+    """
+    n = X.shape[0]
+    node = np.zeros(n, dtype=np.int32)
+    feat = tree.feature
+    thr = tree.threshold
+    left = tree.left
+    right = tree.right
+    # All samples reach a leaf after at most `depth` steps; leaves self-loop
+    # implicitly because we only advance where feature >= 0.
+    for _ in range(max(tree.depth, 1)):
+        f = feat[node]
+        internal = f >= 0
+        if not internal.any():
+            break
+        fi = np.where(internal, f, 0)
+        go_left = X[np.arange(n), fi] <= thr[node]
+        nxt = np.where(go_left, left[node], right[node])
+        node = np.where(internal, nxt, node).astype(np.int32)
+    return tree.leaf_id[node].astype(np.int32)
+
+
+def route_forest_numpy(trees: Sequence[Tree], X: np.ndarray) -> np.ndarray:
+    """Leaf ids for every (sample, tree): returns (N, T) int32 array."""
+    out = np.empty((X.shape[0], len(trees)), dtype=np.int32)
+    for t, tree in enumerate(trees):
+        out[:, t] = route_tree(tree, X)
+    return out
+
+
+@dataclasses.dataclass
+class TreeArrays:
+    """Whole ensemble padded to (T, max_nodes) for JAX/vmap/Pallas routing.
+
+    Padding nodes are leaves with ``feature == -1`` and ``leaf_id == 0`` so
+    routing through them is harmless (they are unreachable anyway).
+    """
+
+    feature: np.ndarray     # (T, max_nodes) int32
+    threshold: np.ndarray   # (T, max_nodes) float32
+    left: np.ndarray        # (T, max_nodes) int32
+    right: np.ndarray       # (T, max_nodes) int32
+    leaf_id: np.ndarray     # (T, max_nodes) int32
+    n_leaves: np.ndarray    # (T,) int32
+    leaf_offset: np.ndarray  # (T,) int64 — global leaf index base per tree
+    max_depth: int
+
+    @property
+    def n_trees(self) -> int:
+        return int(self.feature.shape[0])
+
+    @property
+    def total_leaves(self) -> int:
+        return int(self.n_leaves.sum())
+
+    @classmethod
+    def from_trees(cls, trees: Sequence[Tree]) -> "TreeArrays":
+        T = len(trees)
+        max_nodes = max(t.n_nodes for t in trees)
+        feature = np.full((T, max_nodes), -1, dtype=np.int32)
+        threshold = np.zeros((T, max_nodes), dtype=np.float32)
+        left = np.zeros((T, max_nodes), dtype=np.int32)
+        right = np.zeros((T, max_nodes), dtype=np.int32)
+        leaf_id = np.zeros((T, max_nodes), dtype=np.int32)
+        n_leaves = np.zeros(T, dtype=np.int32)
+        for t, tr in enumerate(trees):
+            n = tr.n_nodes
+            feature[t, :n] = tr.feature
+            threshold[t, :n] = tr.threshold
+            left[t, :n] = tr.left
+            right[t, :n] = tr.right
+            leaf_id[t, :n] = np.where(tr.leaf_id < 0, 0, tr.leaf_id)
+            n_leaves[t] = tr.n_leaves
+        leaf_offset = np.concatenate([[0], np.cumsum(n_leaves)[:-1]]).astype(np.int64)
+        return cls(
+            feature=feature, threshold=threshold, left=left, right=right,
+            leaf_id=leaf_id, n_leaves=n_leaves, leaf_offset=leaf_offset,
+            max_depth=max(t.depth for t in trees),
+        )

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: dense SWLC proximity block materialization.
+
+For a (block_q × block_w) tile of the proximity matrix the kernel holds the
+leaf-code and weight tiles of both sides in VMEM — (block, T) each — and
+accumulates T masked rank-1 updates on the VPU:
+
+    acc += (q[:, t] ⊗ w[:, t]) ⊙ (gl_q[:, t] == gl_w[:, t]ᵀ)
+
+Work is block_q·block_w·T per tile — i.e. the naive-pairwise cost, but only
+for the *requested* blocks (visualization tiles, k-NN re-ranking, medoid
+queries).  The full kernel never goes through here; it uses the factored
+segment-sum path (core.jax_ops) which keeps the paper's O(N T λ̄) bound.
+
+Trees are processed in chunks of ``t_chunk`` so each update is a
+(block_q, t_chunk) × (block_w, t_chunk) broadcast rather than T scalar steps.
+VMEM: 2·block·T·8 bytes for inputs + block_q·block_w·4 for the accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["block_prox_pallas"]
+
+
+def _block_prox_kernel(glq_ref, q_ref, glw_ref, w_ref, out_ref, *, t_chunk: int):
+    glq = glq_ref[...]            # (bq, T)
+    qv = q_ref[...]
+    glw = glw_ref[...]            # (bw, T)
+    wv = w_ref[...]
+    bq, T = glq.shape
+    bw = glw.shape[0]
+    nchunks = T // t_chunk
+
+    def body(c, acc):
+        s = c * t_chunk
+        gq = jax.lax.dynamic_slice(glq, (0, s), (bq, t_chunk))
+        gw = jax.lax.dynamic_slice(glw, (0, s), (bw, t_chunk))
+        qq = jax.lax.dynamic_slice(qv, (0, s), (bq, t_chunk))
+        ww = jax.lax.dynamic_slice(wv, (0, s), (bw, t_chunk))
+        coll = (gq[:, None, :] == gw[None, :, :])
+        contrib = jnp.where(coll, qq[:, None, :] * ww[None, :, :], 0.0)
+        return acc + contrib.sum(axis=-1)
+
+    acc = jax.lax.fori_loop(0, nchunks, body,
+                            jnp.zeros((bq, bw), dtype=jnp.float32))
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_q", "block_w", "t_chunk", "interpret"))
+def block_prox_pallas(gl_q: jax.Array, q: jax.Array, gl_w: jax.Array,
+                      w: jax.Array, block_q: int = 256, block_w: int = 256,
+                      t_chunk: int = 8, interpret: bool = False) -> jax.Array:
+    """(Nq, Nw) float32 proximity block; inputs as in ``ref.block_prox_ref``."""
+    nq, T = gl_q.shape
+    nw = gl_w.shape[0]
+    # pad T to a multiple of t_chunk with a collision-free sentinel tree
+    t_pad = (T + t_chunk - 1) // t_chunk * t_chunk
+    if t_pad != T:
+        pq, pw = t_pad - T, t_pad - T
+        gl_q = jnp.pad(gl_q, ((0, 0), (0, pq)), constant_values=-1)
+        gl_w = jnp.pad(gl_w, ((0, 0), (0, pw)), constant_values=-2)
+        q = jnp.pad(q, ((0, 0), (0, pq)))
+        w = jnp.pad(w, ((0, 0), (0, pw)))
+    nq_pad = (nq + block_q - 1) // block_q * block_q
+    nw_pad = (nw + block_w - 1) // block_w * block_w
+    if nq_pad != nq:
+        gl_q = jnp.pad(gl_q, ((0, nq_pad - nq), (0, 0)), constant_values=-1)
+        q = jnp.pad(q, ((0, nq_pad - nq), (0, 0)))
+    if nw_pad != nw:
+        gl_w = jnp.pad(gl_w, ((0, nw_pad - nw), (0, 0)), constant_values=-2)
+        w = jnp.pad(w, ((0, nw_pad - nw), (0, 0)))
+
+    grid = (nq_pad // block_q, nw_pad // block_w)
+    out = pl.pallas_call(
+        functools.partial(_block_prox_kernel, t_chunk=t_chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, t_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, t_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_w, t_pad), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_w, t_pad), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_w), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq_pad, nw_pad), jnp.float32),
+        interpret=interpret,
+    )(gl_q, q.astype(jnp.float32), gl_w, w.astype(jnp.float32))
+    return out[:nq, :nw]

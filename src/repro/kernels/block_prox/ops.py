@@ -1,0 +1,24 @@
+"""Jit'd wrapper for SWLC block materialization."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .block_prox import block_prox_pallas
+from .ref import block_prox_ref
+
+__all__ = ["block_prox"]
+
+
+def block_prox(gl_q, q, gl_w, w, block_q: int = 256, block_w: int = 256,
+               use_pallas: bool = True) -> jax.Array:
+    gl_q = jnp.asarray(gl_q, jnp.int32)
+    gl_w = jnp.asarray(gl_w, jnp.int32)
+    q = jnp.asarray(q, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    if use_pallas:
+        return block_prox_pallas(gl_q, q, gl_w, w, block_q=block_q,
+                                 block_w=block_w,
+                                 interpret=jax.default_backend() != "tpu")
+    return block_prox_ref(gl_q, q, gl_w, w)

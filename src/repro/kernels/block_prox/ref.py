@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for dense SWLC proximity blocks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["block_prox_ref"]
+
+
+def block_prox_ref(gl_q: jax.Array, q: jax.Array, gl_w: jax.Array,
+                   w: jax.Array) -> jax.Array:
+    """P[i,j] = Σ_t q[i,t]·w[j,t]·1[gl_q[i,t] == gl_w[j,t]].
+
+    gl_q/q: (Nq, T); gl_w/w: (Nw, T).  Returns (Nq, Nw) float32.
+    """
+    coll = (gl_q[:, None, :] == gl_w[None, :, :]).astype(q.dtype)
+    return jnp.einsum("it,jt,ijt->ij", q, w, coll)

@@ -1,0 +1,36 @@
+"""Jit'd wrapper for histogram building (chunks nodes to bound VMEM)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .histogram import histogram_pallas
+from .ref import histogram_ref
+
+__all__ = ["histogram"]
+
+
+def histogram(xb, node, y, w, n_nodes: int, n_bins: int, n_classes: int,
+              tile: int = 512, use_pallas: bool = True,
+              max_node_chunk: int = 64) -> jax.Array:
+    """(n_nodes, D, n_bins, C) float32, chunking nodes for VMEM."""
+    xb = jnp.asarray(xb, jnp.int32)
+    node = jnp.asarray(node, jnp.int32)
+    y = jnp.asarray(y, jnp.int32)
+    w = jnp.asarray(w, jnp.float32)
+    if not use_pallas:
+        return histogram_ref(xb, node, y, w, n_nodes, n_bins, n_classes)
+    interp = jax.default_backend() != "tpu"
+    if n_nodes <= max_node_chunk:
+        return histogram_pallas(xb, node, y, w, n_nodes, n_bins, n_classes,
+                                tile=tile, interpret=interp)
+    outs = []
+    for c0 in range(0, n_nodes, max_node_chunk):
+        c1 = min(c0 + max_node_chunk, n_nodes)
+        sel = (node >= c0) & (node < c1)
+        outs.append(histogram_pallas(
+            xb, jnp.where(sel, node - c0, 0), y,
+            jnp.where(sel, w, 0.0), c1 - c0, n_bins, n_classes,
+            tile=tile, interpret=interp))
+    return jnp.concatenate(outs, axis=0)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for split histograms (scatter-add formulation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["histogram_ref"]
+
+
+def histogram_ref(xb: jax.Array, node: jax.Array, y: jax.Array, w: jax.Array,
+                  n_nodes: int, n_bins: int, n_classes: int) -> jax.Array:
+    """Weighted class histograms per (node, feature, bin).
+
+    xb:   (N, D) int32 bin codes
+    node: (N,)  int32 node slot in [0, n_nodes)
+    y:    (N,)  int32 class in [0, n_classes)
+    w:    (N,)  float32 sample weights
+    returns (n_nodes, D, n_bins, n_classes) float32
+    """
+    n, d = xb.shape
+    flat = ((node[:, None] * d + jnp.arange(d)[None, :]) * n_bins + xb) \
+        * n_classes + y[:, None]
+    size = n_nodes * d * n_bins * n_classes
+    hist = jax.ops.segment_sum(jnp.repeat(w, d), flat.ravel(), num_segments=size)
+    return hist.reshape(n_nodes, d, n_bins, n_classes)

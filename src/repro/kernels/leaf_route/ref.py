@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for batched tree routing."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["route_ref"]
+
+
+def route_ref(x: jax.Array, feature: jax.Array, threshold: jax.Array,
+              left: jax.Array, right: jax.Array, leaf_id: jax.Array,
+              max_depth: int) -> jax.Array:
+    """Route samples through one ensemble.
+
+    x:         (N, D) float32
+    feature:   (T, M) int32   (-1 = leaf)
+    threshold: (T, M) float32
+    left/right/leaf_id: (T, M) int32
+    returns:   (N, T) int32 within-tree leaf ids
+    """
+
+    def one_tree(feat, thr, lt, rt, lid):
+        n = x.shape[0]
+        node = jnp.zeros(n, dtype=jnp.int32)
+
+        def body(_, node):
+            f = feat[node]
+            internal = f >= 0
+            fi = jnp.where(internal, f, 0)
+            xv = jnp.take_along_axis(x, fi[:, None], axis=1)[:, 0]
+            go_left = xv <= thr[node]
+            nxt = jnp.where(go_left, lt[node], rt[node])
+            return jnp.where(internal, nxt, node).astype(jnp.int32)
+
+        node = jax.lax.fori_loop(0, max_depth, body, node)
+        return lid[node]
+
+    return jax.vmap(one_tree, in_axes=(0, 0, 0, 0, 0), out_axes=1)(
+        feature, threshold, left, right, leaf_id)

@@ -1,0 +1,235 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST set the host-device override before any other import (jax locks the
+device count on first init) — hence the first two lines.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite_8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+
+Per cell this prints/records compiled.memory_analysis() (proves it fits) and
+compiled.cost_analysis() (FLOPs/bytes for §Roofline), plus the collective-
+bytes breakdown parsed from the optimized HLO.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs.base import (ALL_ARCHS, SHAPES, applicable_shapes,  # noqa: E402
+                            get_config)
+from ..distributed.sharding import (batch_specs, cache_specs,  # noqa: E402
+                                    param_specs, opt_state_specs,
+                                    with_named_sharding)
+from ..launch.inputs import input_specs  # noqa: E402
+from ..distributed.logical import axis_env, perf_env  # noqa: E402
+from ..launch.mesh import make_production_mesh  # noqa: E402
+from ..models.lm import abstract_cache  # noqa: E402
+from ..train.steps import (abstract_train_state, make_decode_step,  # noqa: E402
+                           make_prefill_step, make_train_step)
+from ..models import lm  # noqa: E402
+from .hlo_analysis import analyze_hlo  # noqa: E402
+
+__all__ = ["lower_cell", "run_cell", "collective_bytes"]
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# shape suffix like f32[8,16]{1,0} or bf16[2,4,8]
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|s16|s8|u64|u32|u16|u8|pred)"
+                       r"\[([\d,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+          "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # ops look like:  %x = bf16[..] all-gather(...), or fusion kinds
+        m = re.match(r"^[%\w\.\-]*\s*=\s*(.+?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        for c in _COLLECTIVES:
+            if op.startswith(c):
+                out[c] += _shape_bytes(m.group(1))
+                out["count"] += 1
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool = False,
+               block_causal: bool = True, attn_chunk: int = 512,
+               donate: bool = True, perf_opts: dict = None):
+    """Lower one (arch, shape, mesh) cell; returns (lowered, mesh, cfg)."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    if cell.name == "long_500k" and not cfg.subquadratic:
+        raise ValueError(f"{arch} is pure full-attention; long_500k skipped "
+                         "(DESIGN.md §Arch-applicability)")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ins = input_specs(cfg, cell)
+
+    with mesh, axis_env(mesh), perf_env(**(perf_opts or {})):
+        if cell.step == "train":
+            state = abstract_train_state(cfg)
+            pspecs = param_specs(state["params"], mesh)
+            sspecs = {"params": pspecs,
+                      "opt": {"m": pspecs, "v": pspecs, "step": P()}}
+            state = {"params": with_named_sharding(state["params"], pspecs, mesh),
+                     "opt": {"m": with_named_sharding(state["opt"]["m"], pspecs, mesh),
+                             "v": with_named_sharding(state["opt"]["v"], pspecs, mesh),
+                             "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+            bspec = batch_specs(mesh, with_image=cfg.family == "vlm")
+            batch = {k: jax.ShapeDtypeStruct(
+                v.shape, v.dtype, sharding=NamedSharding(mesh, bspec[k]))
+                for k, v in ins["batch"].items()}
+            step = make_train_step(cfg, block_causal=block_causal,
+                                   attn_chunk=attn_chunk)
+            jitted = jax.jit(step, donate_argnums=(0,) if donate else ())
+            lowered = jitted.lower(state, batch)
+        elif cell.step == "prefill":
+            params = lm.abstract_params(cfg)
+            pspecs = param_specs(params, mesh)
+            params = with_named_sharding(params, pspecs, mesh)
+            bspec = batch_specs(mesh, with_image=cfg.family == "vlm")
+            batch = {k: jax.ShapeDtypeStruct(
+                v.shape, v.dtype, sharding=NamedSharding(mesh, bspec[k]))
+                for k, v in ins["batch"].items()}
+            step = make_prefill_step(cfg, attn_chunk=attn_chunk,
+                                     block_causal=block_causal)
+            lowered = jax.jit(step).lower(params, batch)
+        else:  # decode
+            params = lm.abstract_params(cfg)
+            pspecs = param_specs(params, mesh)
+            params = with_named_sharding(params, pspecs, mesh)
+            cache = ins["cache"]
+            cspecs = cache_specs(cfg, cache, mesh)
+            cache = with_named_sharding(cache, cspecs, mesh)
+            from ..distributed.sharding import _batch_axes_for
+            b = _batch_axes_for(mesh, ins["token"].shape[0])
+            token = jax.ShapeDtypeStruct(
+                ins["token"].shape, ins["token"].dtype,
+                sharding=NamedSharding(mesh, P(b, None)))
+            step = make_decode_step(cfg)
+            jitted = jax.jit(step, donate_argnums=(2,) if donate else ())
+            lowered = jitted.lower(params, token, cache, ins["pos"])
+    return lowered, mesh, cfg
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool = False,
+             out_dir: Optional[str] = None, **kw) -> dict:
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    try:
+        lowered, mesh, cfg = lower_cell(arch, shape, multi_pod=multi_pod, **kw)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo_text = compiled.as_text()
+        coll = collective_bytes(hlo_text)
+        tc = analyze_hlo(hlo_text)    # trip-count-aware (scan bodies x L)
+        rec.update({
+            "ok": True,
+            "lower_s": round(t1 - t0, 1),
+            "compile_s": round(t2 - t1, 1),
+            "flops": float(cost.get("flops", 0.0)),
+            "hlo_bytes": float(cost.get("bytes accessed", 0.0)),
+            "collectives": coll,
+            "tc_flops": tc.flops,
+            "tc_hbm_bytes": tc.hbm_bytes,
+            "tc_hbm_bytes_fused": tc.hbm_bytes_fused,
+            "tc_collectives": {k: v for k, v in tc.collective_bytes.items()},
+            "tc_collective_total": tc.total_collective,
+            "memory": {
+                "argument_size": getattr(mem, "argument_size_in_bytes", 0),
+                "output_size": getattr(mem, "output_size_in_bytes", 0),
+                "temp_size": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_size": getattr(mem, "generated_code_size_in_bytes", 0),
+            },
+            "n_devices": int(len(mesh.devices.ravel())),
+            "params": cfg.param_count(),
+        })
+    except Exception as e:  # noqa: BLE001 — recorded, not swallowed silently
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = f"{arch}__{shape}__{rec['mesh']}.json"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ALL_ARCHS:
+            cfg = get_config(a)
+            for cell in applicable_shapes(cfg):
+                cells.append((a, cell.name))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    n_fail = 0
+    for mp in meshes:
+        for arch, shape in cells:
+            rec = run_cell(arch, shape, multi_pod=mp, out_dir=args.out)
+            if rec["ok"]:
+                mm = rec["memory"]
+                per_dev = (mm["argument_size"] + mm["temp_size"]) / 1e9
+                print(f"OK   {arch:24s} {shape:12s} {rec['mesh']:8s} "
+                      f"flops={rec['tc_flops']:.3e} hbm={rec['tc_hbm_bytes']:.3e} "
+                      f"coll={rec['tc_collective_total']:.3e}B "
+                      f"mem/dev≈{per_dev:.2f}GB "
+                      f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)",
+                      flush=True)
+            else:
+                n_fail += 1
+                print(f"FAIL {arch:24s} {shape:12s} {rec['mesh']:8s} "
+                      f"{rec['error']}", flush=True)
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

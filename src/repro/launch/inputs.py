@@ -1,0 +1,48 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+``input_specs(cfg, cell)`` returns abstract inputs for the step kind that
+the cell lowers (train/prefill: token+label batch; decode: token, cache,
+pos) — weak-type-correct, shardable, no device allocation.  Modality
+frontends are stubs per the brief: paligemma receives precomputed SigLIP
+patch embeddings, musicgen receives EnCodec token ids.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeCell
+from ..models.lm import abstract_cache
+from ..models.layers import COMPUTE_DTYPE
+
+__all__ = ["input_specs", "batch_struct"]
+
+
+def batch_struct(cfg: ArchConfig, batch: int, seq: int) -> Dict[str, Any]:
+    out = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        out["image_embed"] = jax.ShapeDtypeStruct(
+            (batch, cfg.prefix_len, cfg.d_model), COMPUTE_DTYPE)
+        # text fills the remaining context
+        out["tokens"] = jax.ShapeDtypeStruct(
+            (batch, seq - cfg.prefix_len), jnp.int32)
+        out["labels"] = jax.ShapeDtypeStruct(
+            (batch, seq - cfg.prefix_len), jnp.int32)
+    return out
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, Any]:
+    B, S = cell.global_batch, cell.seq_len
+    if cell.step in ("train", "prefill"):
+        return {"batch": batch_struct(cfg, B, S)}
+    # decode: one new token against a seq_len cache
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "cache": abstract_cache(cfg, B, S),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

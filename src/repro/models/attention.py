@@ -1,0 +1,239 @@
+"""Attention: GQA projections, chunked (flash-style) softmax, decode path.
+
+Training/prefill never materializes the (S, S) score matrix: a
+``lax.scan`` over KV chunks maintains the online-softmax running max /
+denominator (the jnp formulation of flash attention — the Pallas TPU kernel
+in ``repro/kernels/flash_attn`` is the hot-spot version; this module is the
+portable path that the dry-run lowers).
+
+Masks: causal, sliding-window, and prefix-LM (bidirectional prefix) are all
+expressed as a predicate on (q_pos, k_pos) evaluated per chunk.
+
+``block_causal=True`` skips KV chunks that are entirely in the masked
+future for the current query chunk (compute-roofline optimization; see
+EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.logical import get_opt, shard_hint, tp_size_of
+from .layers import Initializer, apply_rope, rotary_embedding
+
+__all__ = ["init_attn", "attn_forward", "attn_decode", "mask_fn"]
+
+NEG_INF = -1e30
+
+
+def init_attn(ini: Initializer, d_model: int, n_heads: int, n_kv: int,
+              head_dim: int, use_bias: bool = False) -> dict:
+    p = {
+        "wq": ini.normal((d_model, n_heads, head_dim), fan_in=d_model),
+        "wk": ini.normal((d_model, n_kv, head_dim), fan_in=d_model),
+        "wv": ini.normal((d_model, n_kv, head_dim), fan_in=d_model),
+        "wo": ini.normal((n_heads, head_dim, d_model), fan_in=n_heads * head_dim),
+    }
+    if use_bias:
+        p["bq"] = ini.zeros((n_heads, head_dim))
+        p["bk"] = ini.zeros((n_kv, head_dim))
+        p["bv"] = ini.zeros((n_kv, head_dim))
+        p["bo"] = ini.zeros((d_model,))
+    return p
+
+
+def mask_fn(q_pos, k_pos, *, window: int = 0, prefix_len: int = 0,
+            window_dynamic=None):
+    """Boolean attend-mask for (q_pos[:,None], k_pos[None,:]) grids.
+
+    ``window_dynamic`` (traced scalar) overrides ``window``; used by hybrid
+    archs where the per-layer window is a scanned input (SWA vs global).
+    """
+    qp, kp = q_pos[:, None], k_pos[None, :]
+    m = kp <= qp
+    if window_dynamic is not None:
+        m &= (qp - kp) < window_dynamic
+    elif window:
+        m &= (qp - kp) < window
+    if prefix_len:
+        m |= (qp < prefix_len) & (kp < prefix_len)
+    return m
+
+
+def _proj_qkv(p, x, compute_dtype):
+    cd = compute_dtype
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"].astype(cd))
+    if "bq" in p:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    return q, k, v
+
+
+def attn_forward(p: dict, x: jax.Array, *, n_heads: int, n_kv: int,
+                 head_dim: int, rope_theta: float, window: int = 0,
+                 prefix_len: int = 0, chunk: int = 512,
+                 block_causal: bool = False, window_dynamic=None,
+                 positions: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence attention (training / prefill). x: (B, S, D)."""
+    B, S_in, D = x.shape
+    cd = x.dtype
+    q, k, v = _proj_qkv(p, x, cd)
+    # pad the sequence to a chunk multiple; padded keys are masked out below
+    S = (S_in + chunk - 1) // chunk * chunk
+    if S != S_in:
+        padw = ((0, 0), (0, S - S_in), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, padw), jnp.pad(k, padw), jnp.pad(v, padw)
+    pos = jnp.arange(S) if positions is None else positions
+    cos, sin = rotary_embedding(pos, head_dim, rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    group = n_heads // n_kv
+    # Full-H space: repeat KV heads to H so every attention tensor is head-
+    # sharded uniformly over the model axis (KV projections stay replicated
+    # when KV doesn't divide tp — see distributed/sharding.py).
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)             # (B, S, H, hd)
+        v = jnp.repeat(v, group, axis=2)
+    # head padding (§Perf): when H doesn't divide the model axis, pad with
+    # zero heads so attention still tensor-parallelizes.  Padded q-heads see
+    # all-zero keys (uniform softmax over junk) but project through zero
+    # wo rows — exact.  FLOPs overhead H_pad/H, activation memory /tp.
+    n_heads_c = n_heads
+    tp = tp_size_of()
+    if get_opt("head_pad") and tp > 1 and n_heads % tp != 0:
+        n_heads_c = (n_heads + tp - 1) // tp * tp
+        padh = ((0, 0), (0, 0), (0, n_heads_c - n_heads), (0, 0))
+        q, k, v = jnp.pad(q, padh), jnp.pad(k, padh), jnp.pad(v, padh)
+    q = q.transpose(0, 2, 1, 3)                      # (B, H, S, hd)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    # anchor head-parallel layout (no-op when H doesn't divide the model axis)
+    q = shard_hint(q, "batch", "tp", None, None)
+    k = shard_hint(k, "batch", "tp", None, None)
+    v = shard_hint(v, "batch", "tp", None, None)
+    scale = head_dim ** -0.5
+
+    n_chunks = S // chunk
+    kc = k.reshape(B, n_heads_c, n_chunks, chunk, head_dim).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, n_heads_c, n_chunks, chunk, head_dim).transpose(2, 0, 1, 3, 4)
+
+    def q_chunk_attn(qi, q_blk):
+        q_pos = jax.lax.dynamic_slice_in_dim(pos, qi * chunk, chunk)
+
+        def kv_step(carry, ci, k_blk, v_blk):
+            m_run, l_run, o_run = carry
+            k_pos = jax.lax.dynamic_slice_in_dim(pos, ci * chunk, chunk)
+            s = jnp.einsum("bhqd,bhcd->bhqc", q_blk, k_blk) * scale
+            mask = mask_fn(q_pos, k_pos, window=window, prefix_len=prefix_len,
+                           window_dynamic=window_dynamic)
+            mask &= (k_pos < S_in)[None, :]          # padded keys are invalid
+            s = jnp.where(mask[None, None], s.astype(jnp.float32), NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            alpha = jnp.exp(m_run - m_new)
+            prob = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + prob.sum(-1)
+            o_new = o_run * alpha[..., None] + jnp.einsum(
+                "bhqc,bhcd->bhqd", prob.astype(cd), v_blk).astype(jnp.float32)
+            return (m_new, l_new, o_new)
+
+        init = (jnp.full((B, n_heads_c, chunk), NEG_INF, jnp.float32),
+                jnp.zeros((B, n_heads_c, chunk), jnp.float32),
+                jnp.zeros((B, n_heads_c, chunk, head_dim), jnp.float32))
+
+        def scan_step(carry, inp):
+            ci, k_blk, v_blk = inp
+            return kv_step(carry, ci, k_blk, v_blk), None
+
+        if block_causal and prefix_len == 0:
+            # causal block skipping: qi is STATIC (python q-chunk loop), so
+            # the kv scan length qi+1 is static too — halves attention FLOPs
+            # and stays reverse-differentiable.
+            (m, l, o), _ = jax.lax.scan(
+                scan_step, init,
+                (jnp.arange(qi + 1), kc[:qi + 1], vc[:qi + 1]))
+        else:
+            (m, l, o), _ = jax.lax.scan(
+                scan_step, init, (jnp.arange(n_chunks), kc, vc))
+        return (o / jnp.maximum(l[..., None], 1e-30)).astype(cd)
+
+    qc = q.reshape(B, n_heads_c, n_chunks, chunk, head_dim)
+    qc = qc.transpose(2, 0, 1, 3, 4)                 # (nc, B, H, chunk, hd)
+    # python loop over q chunks: independent in HLO (XLA parallelizes),
+    # and makes per-chunk static KV bounds possible.
+    out = jnp.stack([q_chunk_attn(qi, qc[qi]) for qi in range(n_chunks)])
+    out = out.transpose(1, 2, 0, 3, 4).reshape(B, n_heads_c, S, head_dim)
+    # drop padded heads (their wo rows are zero anyway) + padded positions
+    out = out.transpose(0, 2, 1, 3)[:, :S_in, :n_heads]   # (B, S_in, H, hd)
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(cd))
+    if "bo" in p:
+        y = y + p["bo"].astype(cd)
+    return y
+
+
+def attn_decode(p: dict, x: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                pos: jax.Array, *, n_heads: int, n_kv: int, head_dim: int,
+                rope_theta: float, window: int = 0):
+    """One-token decode. x: (B, 1, D); caches: (B, S_max, KV, hd).
+
+    ``pos`` is either a scalar (all lanes in lockstep — the sharded serve
+    cells, where dynamic_update_slice keeps the seq-sharded cache update
+    cheap) or a (B,) vector (continuous batching: each slot at its own
+    position, scatter update).  For sliding-window layers the cache is a
+    ring buffer of length ``window`` indexed by pos % window.
+    """
+    B, _, D = x.shape
+    cd = x.dtype
+    S_max = k_cache.shape[1]
+    per_slot = getattr(pos, "ndim", 0) == 1
+    q, k, v = _proj_qkv(p, x, cd)
+    rope_pos = pos[:, None] if per_slot else pos[None]
+    cos, sin = rotary_embedding(rope_pos, head_dim, rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if per_slot:
+        slot = pos % S_max if window else jnp.minimum(pos, S_max - 1)
+        k_cache = k_cache.at[jnp.arange(B), slot].set(
+            k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[jnp.arange(B), slot].set(
+            v[:, 0].astype(v_cache.dtype))
+    else:
+        slot = pos % S_max if window else pos
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
+    group = n_heads // n_kv
+    qh = q.reshape(B, n_heads, head_dim)
+    scale = head_dim ** -0.5
+    kk = k_cache.astype(cd)
+    vv = v_cache.astype(cd)
+    if group > 1:
+        kk = jnp.repeat(kk, group, axis=2)           # (B, S, H, hd)
+        vv = jnp.repeat(vv, group, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", qh, kk) * scale
+    kpos = jnp.arange(S_max)
+    if per_slot:
+        if window:
+            valid = kpos[None, :] < jnp.minimum(pos + 1, S_max)[:, None]
+        else:
+            valid = kpos[None, :] <= pos[:, None]
+        s = jnp.where(valid[:, None, :], s.astype(jnp.float32), NEG_INF)
+    else:
+        if window:
+            valid = (kpos < jnp.minimum(pos + 1, S_max))
+        else:
+            valid = kpos <= pos
+        s = jnp.where(valid[None, None], s.astype(jnp.float32), NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1).astype(cd)
+    o = jnp.einsum("bhs,bshd->bhd", prob, vv)
+    o = o.reshape(B, 1, n_heads, head_dim)
+    y = jnp.einsum("bsnh,nhd->bsd", o, p["wo"].astype(cd))
+    if "bo" in p:
+        y = y + p["bo"].astype(cd)
+    return y, k_cache, v_cache

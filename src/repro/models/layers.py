@@ -1,0 +1,87 @@
+"""Shared model layers: norms, rotary embeddings, initializers.
+
+Pure-functional style: parameters are plain dict pytrees; every module is an
+``init_*`` returning leaves (or ShapeDtypeStructs in abstract mode) plus an
+``apply`` function.  ``Initializer`` threads an optional PRNG so the same
+code path builds real params (training) and abstract params (dry-run).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Initializer", "rms_norm", "rotary_embedding", "apply_rope",
+           "silu", "PARAM_DTYPE", "COMPUTE_DTYPE"]
+
+PARAM_DTYPE = jnp.float32
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+class Initializer:
+    """Creates param leaves; abstract=True yields ShapeDtypeStruct (no alloc)."""
+
+    def __init__(self, key: Optional[jax.Array] = None, scale: float = 0.02):
+        self.key = key
+        self.scale = scale
+        self.abstract = key is None
+
+    def _next(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def normal(self, shape: Sequence[int], fan_in: Optional[int] = None,
+               dtype=PARAM_DTYPE):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(tuple(shape), dtype)
+        std = self.scale if fan_in is None else 1.0 / np.sqrt(fan_in)
+        return (jax.random.normal(self._next(), tuple(shape), dtype) * std
+                ).astype(dtype)
+
+    def zeros(self, shape: Sequence[int], dtype=PARAM_DTYPE):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(tuple(shape), dtype)
+        return jnp.zeros(tuple(shape), dtype)
+
+    def ones(self, shape: Sequence[int], dtype=PARAM_DTYPE):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(tuple(shape), dtype)
+        return jnp.ones(tuple(shape), dtype)
+
+    def const(self, value: np.ndarray, dtype=PARAM_DTYPE):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(np.asarray(value).shape, dtype)
+        return jnp.asarray(value, dtype)
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * gamma.astype(jnp.float32)).astype(dt)
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def rotary_embedding(positions: jax.Array, head_dim: int,
+                     theta: float = 10_000.0) -> Tuple[jax.Array, jax.Array]:
+    """(cos, sin) tables for given positions: (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, hd); cos/sin: (S, hd/2) or broadcastable."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # broadcast tables over the head axis: (S, 1, hd/2)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)

@@ -1,0 +1,354 @@
+"""Unified decoder LM over all assigned architecture families.
+
+One parameter layout + three entry points:
+
+  - ``forward(params, cfg, tokens, ...)``       — logits for train/prefill
+  - ``decode_step(params, cfg, token, cache)``  — one-token serve step
+  - ``init_params(cfg, key)`` / ``abstract_params(cfg)``
+
+Layers are stacked on a leading L axis and run under ``lax.scan`` with
+rematerialization, so the HLO stays small for 88-layer configs and the
+dry-run compiles quickly.  Per-layer heterogeneity (hymba's 3 global-
+attention layers) is expressed as scanned boolean inputs, never as python
+branches, so the scan stays uniform.
+
+VLM (paligemma): ``image_embed`` (B, P, D) precomputed patch embeddings (stub
+frontend per the brief) are prepended to the token embeddings and the mask
+is prefix-LM.  Audio (musicgen): token ids over the EnCodec codebook — the
+frontend is likewise a stub.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distributed.logical import shard_hint
+from .attention import NEG_INF, attn_decode, attn_forward, init_attn
+from .layers import COMPUTE_DTYPE, Initializer, rms_norm, silu
+from .moe import init_moe, moe_forward
+from .ssm import init_ssm, init_ssm_cache, ssm_decode, ssm_forward
+
+__all__ = ["init_params", "abstract_params", "forward", "decode_step",
+           "init_cache", "abstract_cache", "loss_fn"]
+
+
+# --------------------------------------------------------------------------
+# parameter construction
+# --------------------------------------------------------------------------
+def _init_block(ini: Initializer, cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    p: Dict[str, Any] = {"ln1": ini.ones((D,))}
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio", "moe", "hybrid"):
+        p["attn"] = init_attn(ini, D, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.head_dim, cfg.use_bias)
+    if fam in ("ssm", "hybrid"):
+        p["ssm"] = init_ssm(ini, D, cfg.d_inner, cfg.ssm_heads,
+                            cfg.ssm_state, cfg.ssm_conv)
+    if fam == "moe":
+        p["ln2"] = ini.ones((D,))
+        p["moe"] = init_moe(ini, D, cfg.n_experts, cfg.d_ff_expert)
+    elif fam in ("dense", "vlm", "audio", "hybrid"):
+        p["ln2"] = ini.ones((D,))
+        p["mlp"] = {
+            "w_gate": ini.normal((D, cfg.d_ff), fan_in=D),
+            "w_up": ini.normal((D, cfg.d_ff), fan_in=D),
+            "w_down": ini.normal((cfg.d_ff, D), fan_in=cfg.d_ff),
+        }
+    return p
+
+
+def _stack_layers(cfg: ArchConfig, ini: Initializer) -> dict:
+    """Build one block then broadcast its structure L times (stacked leaves)."""
+    L = cfg.n_layers
+    if ini.abstract:
+        block = _init_block(ini, cfg)
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((L,) + s.shape, s.dtype), block)
+    blocks = [_init_block(ini, cfg) for _ in range(L)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+def init_params(cfg: ArchConfig, key: Optional[jax.Array]) -> dict:
+    ini = Initializer(key)
+    params = {
+        "embed": ini.normal((cfg.vocab, cfg.d_model), fan_in=cfg.d_model),
+        "layers": _stack_layers(cfg, ini),
+        "final_norm": ini.ones((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = ini.normal((cfg.d_model, cfg.vocab),
+                                       fan_in=cfg.d_model)
+    return params
+
+
+def abstract_params(cfg: ArchConfig) -> dict:
+    return init_params(cfg, None)
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+def _block_forward(cfg: ArchConfig, bp: dict, x: jax.Array, is_global,
+                   *, block_causal: bool, chunk: int) -> jax.Array:
+    fam = cfg.family
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    mix = 0.0
+    if fam in ("dense", "vlm", "audio", "moe"):
+        mix = attn_forward(
+            bp["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            window=cfg.window, prefix_len=cfg.prefix_len, chunk=chunk,
+            block_causal=block_causal)
+    elif fam == "ssm":
+        mix = ssm_forward(bp["ssm"], h, d_inner=cfg.d_inner,
+                          state=cfg.ssm_state, n_heads=cfg.ssm_heads,
+                          head_dim=cfg.ssm_head_dim)
+    elif fam == "hybrid":
+        # hymba: parallel attention + SSM heads, averaged.  SWA everywhere
+        # except flagged global layers; the per-layer window is a *traced*
+        # mask width so the scan stays uniform at single-pass cost.
+        S = x.shape[1]
+        win_dyn = jnp.where(is_global, S + 1, cfg.window)
+        attn_out = attn_forward(
+            bp["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            window=0, window_dynamic=win_dyn, chunk=chunk,
+            block_causal=block_causal)
+        s = ssm_forward(bp["ssm"], h, d_inner=cfg.d_inner,
+                        state=cfg.ssm_state, n_heads=cfg.ssm_heads,
+                        head_dim=cfg.ssm_head_dim)
+        mix = 0.5 * (attn_out + s)
+    x = x + mix
+
+    aux = jnp.zeros((), jnp.float32)
+    if fam == "moe":
+        h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        m, aux = moe_forward(bp["moe"], h2, n_experts=cfg.n_experts,
+                             top_k=cfg.top_k,
+                             capacity_factor=cfg.capacity_factor)
+        x = x + m
+    elif fam in ("dense", "vlm", "audio", "hybrid"):
+        h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        cd = x.dtype
+        g = silu(jnp.einsum("bsd,df->bsf", h2, bp["mlp"]["w_gate"].astype(cd)))
+        u = jnp.einsum("bsd,df->bsf", h2, bp["mlp"]["w_up"].astype(cd))
+        g = shard_hint(g, "batch", None, "tp")
+        x = x + jnp.einsum("bsf,fd->bsd", g * u, bp["mlp"]["w_down"].astype(cd))
+    return x, aux
+
+
+def forward(params: dict, cfg: ArchConfig, tokens: jax.Array,
+            image_embed: Optional[jax.Array] = None,
+            block_causal: bool = False, attn_chunk: int = 512,
+            remat: bool = True, keep_padded_vocab: bool = False
+            ) -> Tuple[jax.Array, jax.Array]:
+    """tokens: (B, S[, ...]) int32 -> (logits (B, S, V), aux_loss)."""
+    cd = COMPUTE_DTYPE
+    x = params["embed"][tokens].astype(cd) * (cfg.d_model ** 0.5)
+    x = shard_hint(x, "batch", "sp", None)
+    if cfg.family == "vlm":
+        assert image_embed is not None, "vlm needs stub patch embeddings"
+        x = jnp.concatenate([image_embed.astype(cd), x], axis=1)
+
+    L = cfg.n_layers
+    is_global = jnp.zeros((L,), bool)
+    if cfg.global_layers:
+        is_global = is_global.at[jnp.asarray(cfg.global_layers)].set(True)
+
+    def layer(carry, inp):
+        bp, glob = inp
+        y, aux = _block_forward(cfg, bp, carry, glob,
+                                block_causal=block_causal, chunk=attn_chunk)
+        # Megatron-style sequence-parallel residual: carries (the remat-saved
+        # activations) live S-sharded over the model axis between blocks.
+        y = shard_hint(y, "batch", "sp", None)
+        return y, aux
+
+    layer_fn = jax.checkpoint(layer) if remat else layer
+    x, auxs = jax.lax.scan(layer_fn, x, (params["layers"], is_global))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    # vocab padding (§Perf C2): odd vocabs (minicpm 122753) can't shard the
+    # logits dim -> 10s of GB of replicated fp32 logit slabs in the loss.
+    # Pad the head to a tp multiple; padded entries are masked to -inf so
+    # logsumexp / argmax are exact.  The loss path keeps the padded (sharded)
+    # layout; plain-forward callers get the sliced view.
+    from ..distributed.logical import get_opt, tp_size_of
+    V = head.shape[1]
+    tp = tp_size_of()
+    if get_opt("head_pad") and tp > 1 and V % tp != 0:
+        V_pad = (V + tp - 1) // tp * tp
+        head = jnp.pad(head, ((0, 0), (0, V_pad - V)))
+        logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cd))
+        logits = shard_hint(logits, "batch", None, "tp")
+        logits = jnp.where(jnp.arange(V_pad) < V, logits, NEG_INF)
+        if not keep_padded_vocab:
+            logits = logits[..., :V]
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cd))
+        logits = shard_hint(logits, "batch", None, "tp")
+    if cfg.family == "vlm":
+        logits = logits[:, image_embed.shape[1]:]
+    return logits, auxs.mean()
+
+
+def loss_fn(params: dict, cfg: ArchConfig, tokens: jax.Array,
+            labels: jax.Array, image_embed: Optional[jax.Array] = None,
+            aux_weight: float = 0.01, **kw) -> jax.Array:
+    logits, aux = forward(params, cfg, tokens, image_embed=image_embed,
+                          keep_padded_vocab=True, **kw)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (logz - ll).mean() + aux_weight * aux
+
+
+# --------------------------------------------------------------------------
+# serve (decode) path
+# --------------------------------------------------------------------------
+def _attn_cache_len(cfg: ArchConfig, layer_global: bool, seq_len: int) -> int:
+    if cfg.window and not layer_global:
+        return min(cfg.window, seq_len)
+    return seq_len
+
+
+def _cache_struct(cfg: ArchConfig, batch: int, seq_len: int, abstract: bool,
+                  dtype=COMPUTE_DTYPE):
+    """Cache pytree. Hymba keeps two stacked attention caches (SWA ring
+    buffers + full-length global layers); others are uniform."""
+    mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if abstract \
+        else (lambda s, dt: jnp.zeros(s, dt))
+    c: Dict[str, Any] = {}
+    fam = cfg.family
+    L = cfg.n_layers
+    if fam in ("dense", "vlm", "audio", "moe"):
+        c["k"] = mk((L, batch, seq_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+        c["v"] = mk((L, batch, seq_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+    if fam in ("ssm", "hybrid"):
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+        c["conv"] = mk((L, batch, cfg.ssm_conv - 1, conv_ch), dtype)
+        c["ssm"] = mk((L, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                       cfg.ssm_state), jnp.float32)
+    if fam == "hybrid":
+        n_glob = len(cfg.global_layers)
+        w = min(cfg.window, seq_len) if cfg.window else seq_len
+        c["k_swa"] = mk((L, batch, w, cfg.n_kv_heads, cfg.head_dim), dtype)
+        c["v_swa"] = mk((L, batch, w, cfg.n_kv_heads, cfg.head_dim), dtype)
+        c["k_glob"] = mk((n_glob, batch, seq_len, cfg.n_kv_heads,
+                          cfg.head_dim), dtype)
+        c["v_glob"] = mk((n_glob, batch, seq_len, cfg.n_kv_heads,
+                          cfg.head_dim), dtype)
+    return c
+
+
+def init_cache(cfg, batch, seq_len, dtype=COMPUTE_DTYPE):
+    return _cache_struct(cfg, batch, seq_len, abstract=False, dtype=dtype)
+
+
+def abstract_cache(cfg, batch, seq_len, dtype=COMPUTE_DTYPE):
+    return _cache_struct(cfg, batch, seq_len, abstract=True, dtype=dtype)
+
+
+def decode_step(params: dict, cfg: ArchConfig, token: jax.Array, cache: dict,
+                pos: jax.Array) -> Tuple[jax.Array, dict]:
+    """token: (B, 1) int32; pos: () int32 current position.
+
+    Returns (logits (B, 1, V), new_cache).  Uniform-family models scan over
+    stacked layers; hymba unrolls (32 layers, heterogeneous caches).
+    """
+    cd = COMPUTE_DTYPE
+    x = params["embed"][token].astype(cd) * (cfg.d_model ** 0.5)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "audio", "moe"):
+        def layer(x, inp):
+            bp, k_c, v_c = inp
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            a, k_c, v_c = attn_decode(
+                bp["attn"], h, k_c, v_c, pos, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                rope_theta=cfg.rope_theta, window=cfg.window)
+            x = x + a
+            h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            if fam == "moe":
+                m, _ = moe_forward(bp["moe"], h2, n_experts=cfg.n_experts,
+                                   top_k=cfg.top_k,
+                                   capacity_factor=cfg.capacity_factor)
+                x = x + m
+            else:
+                g = silu(jnp.einsum("bsd,df->bsf", h2,
+                                    bp["mlp"]["w_gate"].astype(cd)))
+                u = jnp.einsum("bsd,df->bsf", h2, bp["mlp"]["w_up"].astype(cd))
+                x = x + jnp.einsum("bsf,fd->bsd", g * u,
+                                   bp["mlp"]["w_down"].astype(cd))
+            return x, (k_c, v_c)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            layer, x, (params["layers"], cache["k"], cache["v"]))
+        cache = dict(cache, k=k_new, v=v_new)
+
+    elif fam == "ssm":
+        def layer(x, inp):
+            bp, conv_c, ssm_c = inp
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            y, conv_c, ssm_c = ssm_decode(
+                bp["ssm"], h, conv_c, ssm_c, d_inner=cfg.d_inner,
+                state=cfg.ssm_state, n_heads=cfg.ssm_heads,
+                head_dim=cfg.ssm_head_dim)
+            return x + y, (conv_c, ssm_c)
+
+        x, (conv_new, ssm_new) = jax.lax.scan(
+            layer, x, (params["layers"], cache["conv"], cache["ssm"]))
+        cache = dict(cache, conv=conv_new, ssm=ssm_new)
+
+    else:  # hybrid (hymba): unrolled, heterogeneous caches
+        new_cache = {k: v for k, v in cache.items()}
+        glob_slot = {l: i for i, l in enumerate(cfg.global_layers)}
+        for l in range(cfg.n_layers):
+            bp = jax.tree.map(lambda a: a[l], params["layers"])
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            if l in glob_slot:
+                g = glob_slot[l]
+                a, kg, vg = attn_decode(
+                    bp["attn"], h, new_cache["k_glob"][g],
+                    new_cache["v_glob"][g], pos, n_heads=cfg.n_heads,
+                    n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                    rope_theta=cfg.rope_theta, window=0)
+                new_cache["k_glob"] = new_cache["k_glob"].at[g].set(kg)
+                new_cache["v_glob"] = new_cache["v_glob"].at[g].set(vg)
+            else:
+                a, ks, vs = attn_decode(
+                    bp["attn"], h, new_cache["k_swa"][l],
+                    new_cache["v_swa"][l], pos, n_heads=cfg.n_heads,
+                    n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                    rope_theta=cfg.rope_theta, window=cfg.window)
+                new_cache["k_swa"] = new_cache["k_swa"].at[l].set(ks)
+                new_cache["v_swa"] = new_cache["v_swa"].at[l].set(vs)
+            y, conv_c, ssm_c = ssm_decode(
+                bp["ssm"], h, new_cache["conv"][l], new_cache["ssm"][l],
+                d_inner=cfg.d_inner, state=cfg.ssm_state,
+                n_heads=cfg.ssm_heads, head_dim=cfg.ssm_head_dim)
+            new_cache["conv"] = new_cache["conv"].at[l].set(conv_c)
+            new_cache["ssm"] = new_cache["ssm"].at[l].set(ssm_c)
+            x = x + 0.5 * (a + y)
+            h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            g2 = silu(jnp.einsum("bsd,df->bsf", h2,
+                                 bp["mlp"]["w_gate"].astype(cd)))
+            u2 = jnp.einsum("bsd,df->bsf", h2, bp["mlp"]["w_up"].astype(cd))
+            x = x + jnp.einsum("bsf,fd->bsd", g2 * u2,
+                               bp["mlp"]["w_down"].astype(cd))
+        cache = new_cache
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cd))
+    return logits, cache

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (GShard-style).
+
+Dense one-hot dispatch tensors are infeasible at (65k tokens × 128 experts ×
+5k capacity), so dispatch runs through an argsort over expert assignments:
+
+  1. router: top-k experts + softmax-renormalized gates per token,
+  2. sort (token, k) pairs by expert id; rank-within-expert via a
+     searchsorted over the sorted ids,
+  3. scatter token activations into an (E, C, D) buffer (rank >= C drops —
+     classic capacity truncation; C = tokens·top_k·cf / E),
+  4. batched expert FFN: einsum over the expert-sharded buffer (EP axis),
+  5. gather back + gate-weighted combine.
+
+Under pjit the buffer is sharded (E→model, C, D); XLA inserts the
+all-to-alls at the scatter/gather boundaries.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.logical import get_opt, shard_hint, tp_size_of
+from .layers import Initializer, silu
+
+__all__ = ["init_moe", "moe_forward"]
+
+
+def init_moe(ini: Initializer, d_model: int, n_experts: int, d_ff: int) -> dict:
+    return {
+        "router": ini.normal((d_model, n_experts), fan_in=d_model),
+        "w_gate": ini.normal((n_experts, d_model, d_ff), fan_in=d_model),
+        "w_up": ini.normal((n_experts, d_model, d_ff), fan_in=d_model),
+        "w_down": ini.normal((n_experts, d_ff, d_model), fan_in=d_ff),
+    }
+
+
+def moe_forward(p: dict, x: jax.Array, *, n_experts: int, top_k: int,
+                capacity_factor: float = 1.25) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss).  aux = load-balancing loss (Switch)."""
+    B, S, D = x.shape
+    cd = x.dtype
+    N = B * S
+    xf = x.reshape(N, D)
+
+    logits = jnp.einsum("nd,de->ne", xf, p["router"].astype(cd)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # expert padding (§Perf): when E doesn't divide the model axis, pad with
+    # phantom experts (zero weights, -inf router logits — never selected) so
+    # the expert buffer still shards E over "model".  Total capacity slots
+    # E_pad·C stay ≈ tokens·top_k·cf, so FLOPs are unchanged; per-real-expert
+    # capacity shrinks by E/E_pad (mitigate with capacity_factor).
+    tp = tp_size_of()
+    w_gate, w_up, w_down = p["w_gate"], p["w_up"], p["w_down"]
+    if get_opt("expert_pad") and tp > 1 and n_experts % tp != 0:
+        e_pad = (n_experts + tp - 1) // tp * tp
+        probs = jnp.pad(probs, ((0, 0), (0, e_pad - n_experts)))
+        padw = ((0, e_pad - n_experts), (0, 0), (0, 0))
+        w_gate = jnp.pad(w_gate, padw)
+        w_up = jnp.pad(w_up, padw)
+        w_down = jnp.pad(w_down, padw)
+        n_experts = e_pad
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)          # (N, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], n_experts), axis=0)
+    router_mean = probs.mean(0)
+    aux = n_experts * jnp.sum(density * router_mean)
+
+    # ---- group-local sort-based dispatch (§Perf iteration B1) ----
+    # Dispatch groups = sequences (G = B): each group's argsort / capacity /
+    # scatter touches only its own tokens, so under pjit the group axis
+    # shards over ("pod","data") and NO collective crosses the data axis in
+    # dispatch — the only inter-device traffic left is the genuine
+    # token->expert all-to-all at the buffer boundary.  (The previous
+    # global-sort formulation made GSPMD all-gather activations per layer:
+    # qwen3 train_4k collective term 1607s -> see EXPERIMENTS.md.)
+    G = B if N % B == 0 else 1
+    Ng = N // G
+    C = int(Ng * top_k * capacity_factor / n_experts) + 1
+
+    def dispatch_one(xg, eg, gg):
+        # xg: (Ng, D); eg/gg: (Ng, k)
+        flat_e = eg.reshape(-1)
+        order = jnp.argsort(flat_e)
+        sorted_e = flat_e[order]
+        start = jnp.searchsorted(sorted_e, jnp.arange(n_experts), side="left")
+        rank = jnp.arange(Ng * top_k) - start[sorted_e]
+        tok = order // top_k
+        keep = rank < C
+        slot = jnp.where(keep, sorted_e * C + rank, n_experts * C)
+        buf = jnp.zeros((n_experts * C + 1, D), dtype=cd)
+        buf = buf.at[slot].set(xg[tok], mode="drop", unique_indices=True)
+        return buf[:-1].reshape(n_experts, C, D), (slot, tok, keep,
+                                                   gg.reshape(-1)[order])
+
+    xg = xf.reshape(G, Ng, D)
+    buf, (slot, tok, keep, gates_s) = jax.vmap(dispatch_one)(
+        xg, expert_ids.reshape(G, Ng, top_k), gate_vals.reshape(G, Ng, top_k))
+    buf = shard_hint(buf, "batch", "tp", None, None)  # G->data, E->model
+
+    # ---- expert FFN (EP-sharded einsum, batched over groups) ----
+    h = silu(jnp.einsum("gecd,edf->gecf", buf, w_gate.astype(cd))) \
+        * jnp.einsum("gecd,edf->gecf", buf, w_up.astype(cd))
+    h = shard_hint(h, "batch", "tp", None, None)
+    out_buf = jnp.einsum("gecf,efd->gecd", h, w_down.astype(cd))
+    out_buf = shard_hint(out_buf, "batch", "tp", None, None)
+
+    # ---- gather + combine (group-local) ----
+    def combine_one(ob, slot, tok, keep, gates):
+        flat = ob.reshape(n_experts * C, D)
+        gathered = jnp.where(keep[:, None],
+                             flat[jnp.minimum(slot, n_experts * C - 1)], 0.0)
+        contrib = gathered * gates[:, None].astype(cd)
+        return jnp.zeros((Ng, D), dtype=cd).at[tok].add(contrib)
+
+    out = jax.vmap(combine_one)(out_buf, slot, tok, keep, gates_s)
+    return out.reshape(B, S, D), aux

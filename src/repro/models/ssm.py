@@ -1,0 +1,163 @@
+"""Mamba2 (SSD — state-space duality) blocks: chunked scan + O(1) decode.
+
+The SSD form computes, per head, y_i = Σ_{j<=i} C_i^T (Π_{j<l<=i} a_l) B_j
+(dt_j x_j).  The chunked algorithm (chunk Q) does the intra-chunk part as a
+masked quadratic matmul (MXU-friendly) and carries the inter-chunk state
+h ∈ R^{heads×head_dim×state} with a lax.scan — O(S·Q) work, O(1) decode
+state, which is what makes the ``long_500k`` cell runnable for SSM archs.
+
+Following mamba2, the short causal conv runs over the concatenated (x, B, C)
+channels, and the output is RMS-norm-gated by z before out-projection.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.logical import shard_hint
+from .layers import Initializer, rms_norm, silu
+
+__all__ = ["init_ssm", "ssm_forward", "ssm_decode", "init_ssm_cache"]
+
+
+def init_ssm(ini: Initializer, d_model: int, d_inner: int, n_heads: int,
+             state: int, conv: int = 4) -> dict:
+    conv_ch = d_inner + 2 * state
+    return {
+        "in_proj": ini.normal((d_model, 2 * d_inner + 2 * state + n_heads),
+                              fan_in=d_model),
+        "conv_w": ini.normal((conv, conv_ch), fan_in=conv),
+        "conv_b": ini.zeros((conv_ch,)),
+        "A_log": ini.zeros((n_heads,)),
+        "D": ini.ones((n_heads,)),
+        "dt_bias": ini.zeros((n_heads,)),
+        "out_norm": ini.ones((d_inner,)),
+        "out_proj": ini.normal((d_inner, d_model), fan_in=d_inner),
+    }
+
+
+def _split_proj(p, u, d_inner, state, n_heads, cd):
+    zxbcdt = jnp.einsum("bsd,de->bse", u, p["in_proj"].astype(cd))
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * state], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc, cd, conv_state: Optional[jax.Array] = None):
+    """Depthwise causal conv, width K. xbc: (B, S, Cch)."""
+    K = p["conv_w"].shape[0]
+    w = p["conv_w"].astype(cd)
+    if conv_state is None:
+        pad = jnp.zeros_like(xbc[:, :K - 1])
+        xp = jnp.concatenate([pad, xbc], axis=1)
+    else:
+        xp = jnp.concatenate([conv_state.astype(cd), xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return silu(out + p["conv_b"].astype(cd)), new_state
+
+
+def ssm_forward(p: dict, u: jax.Array, *, d_inner: int, state: int,
+                n_heads: int, head_dim: int, chunk: int = 256) -> jax.Array:
+    """Full-sequence SSD. u: (B, S, D) -> (B, S, D)."""
+    B, S, D = u.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    cd = u.dtype
+    z, xbc, dt = _split_proj(p, u, d_inner, state, n_heads, cd)
+    xbc, _ = _causal_conv(p, xbc, cd)
+    x, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + state], axis=-1)
+    x = x.reshape(B, S, n_heads, head_dim)
+    x = shard_hint(x, "batch", None, "tp", None)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))     # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (H,)
+    da = dt * A[None, None, :]                                   # (B,S,H) <= 0
+
+    nc = S // chunk
+    xc = x.reshape(B, nc, chunk, n_heads, head_dim)
+    Bc = Bm.reshape(B, nc, chunk, state).astype(cd)
+    Cc = Cm.reshape(B, nc, chunk, state).astype(cd)
+    dac = da.reshape(B, nc, chunk, n_heads)
+    dtc = dt.reshape(B, nc, chunk, n_heads)
+
+    cum = jnp.cumsum(dac, axis=2)                                # (B,nc,Q,H)
+    # intra-chunk decay L[i,j] = exp(cum_i - cum_j), i >= j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    # mask in log-space BEFORE exp: avoids inf*0 NaNs in the backward pass
+    Lmat = jnp.exp(jnp.where(tri, seg, -jnp.inf))
+
+    xdt = xc * dtc[..., None].astype(cd)                         # (B,nc,Q,H,P)
+    CB = jnp.einsum("bnqs,bnks->bnqk", Cc, Bc).astype(jnp.float32)
+    y_intra = jnp.einsum("bnqk,bnqkh,bnkhp->bnqhp",
+                         CB, Lmat, xdt.astype(jnp.float32))
+
+    # inter-chunk state recurrence
+    chunk_sum = cum[:, :, -1, :]                                 # (B,nc,H)
+    # state contribution of each chunk: Σ_j exp(chunk_sum - cum_j) B_j ⊗ xdt_j
+    decay_to_end = jnp.exp(chunk_sum[:, :, None, :] - cum)       # (B,nc,Q,H)
+    S_chunk = jnp.einsum("bnqs,bnqh,bnqhp->bnhps",
+                         Bc.astype(jnp.float32), decay_to_end,
+                         xdt.astype(jnp.float32))                # (B,nc,H,P,N)
+
+    def carry_fn(h, inp):
+        s_c, decay_c = inp                                       # (B,H,P,N),(B,H)
+        h_new = h * jnp.exp(decay_c)[:, :, None, None] + s_c
+        return h_new, h                                          # emit PREVIOUS state
+
+    h0 = jnp.zeros((B, n_heads, head_dim, state), jnp.float32)
+    _, h_prev = jax.lax.scan(
+        carry_fn, h0,
+        (S_chunk.transpose(1, 0, 2, 3, 4), chunk_sum.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                     # (B,nc,H,P,N)
+
+    decay_from_start = jnp.exp(cum)                              # (B,nc,Q,H)
+    y_inter = jnp.einsum("bnqs,bnqh,bnhps->bnqhp",
+                         Cc.astype(jnp.float32), decay_from_start, h_prev)
+
+    y = (y_intra + y_inter).reshape(B, S, n_heads, head_dim)
+    y = y + x.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, d_inner).astype(cd)
+    y = shard_hint(y, "batch", None, "tp")
+    y = rms_norm(y, p["out_norm"]) * silu(z)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+
+
+def init_ssm_cache(ini_or_shape, B: int, d_inner: int, state: int,
+                   n_heads: int, head_dim: int, conv: int = 4,
+                   dtype=jnp.float32):
+    """(conv_state, ssm_state) zero caches for decode."""
+    conv_ch = d_inner + 2 * state
+    return (jnp.zeros((B, conv - 1, conv_ch), dtype),
+            jnp.zeros((B, n_heads, head_dim, state), dtype))
+
+
+def ssm_decode(p: dict, u: jax.Array, conv_state: jax.Array,
+               ssm_state: jax.Array, *, d_inner: int, state: int,
+               n_heads: int, head_dim: int):
+    """One-token step. u: (B, 1, D). Returns (y, conv_state, ssm_state)."""
+    B, _, D = u.shape
+    cd = u.dtype
+    z, xbc, dt = _split_proj(p, u, d_inner, state, n_heads, cd)
+    xbc, new_conv = _causal_conv(p, xbc, cd, conv_state=conv_state)
+    x, Bm, Cm = jnp.split(xbc[:, 0], [d_inner, d_inner + state], axis=-1)
+    x = x.reshape(B, n_heads, head_dim)
+
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))    # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dtv * A[None, :])                               # (B,H)
+
+    xdt = x.astype(jnp.float32) * dtv[..., None]
+    upd = jnp.einsum("bs,bhp->bhps", Bm.astype(jnp.float32), xdt)
+    h = ssm_state * da[:, :, None, None] + upd
+    y = jnp.einsum("bs,bhps->bhp", Cm.astype(jnp.float32), h)
+    y = y + x.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(cd)
+    y = rms_norm(y, p["out_norm"]) * silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+    return out, new_conv.astype(conv_state.dtype), h

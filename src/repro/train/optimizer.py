@@ -1,0 +1,84 @@
+"""AdamW with cosine / WSD schedules and global-norm clipping (pure JAX).
+
+Optimizer state mirrors the parameter sharding (m, v get the same
+PartitionSpecs), so FSDP sharding extends to the optimizer — ZeRO-style.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "lr_at"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"        # 'cosine' | 'wsd' | 'const'
+    wsd_decay_frac: float = 0.1     # MiniCPM-style warmup-stable-decay
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "cosine":
+        t = jnp.clip((s - cfg.warmup_steps)
+                     / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        mult = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        decay_start = cfg.total_steps * (1 - cfg.wsd_decay_frac)
+        t = jnp.clip((s - decay_start)
+                     / jnp.maximum(cfg.total_steps - decay_start, 1), 0, 1)
+        mult = 1.0 - t                      # linear decay tail; stable before
+    else:
+        mult = 1.0
+    return cfg.lr * warm * mult
+
+
+def adamw_init(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros_like(p)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: AdamWConfig, grads: Any, opt: dict, params: Any):
+    """Returns (new_params, new_opt, metrics)."""
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = opt["step"] + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.betas
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                            + cfg.weight_decay * p32)
+        return p_new.astype(p.dtype), m, v
+
+    flat = jax.tree.map(upd, params, grads, opt["m"], opt["v"])
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

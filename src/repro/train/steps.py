@@ -1,0 +1,85 @@
+"""Jittable train / prefill / decode steps (the dry-run lowering targets).
+
+``make_train_step(cfg, opt_cfg)`` returns a pure function
+``(state, batch) -> (state, metrics)`` suitable for ``jax.jit`` with
+donated state.  Cross-pod gradient compression (int8 + error feedback) hooks
+in between grad computation and the optimizer when enabled.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distributed.compression import compress_decompress_grads
+from ..models import lm
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "init_train_state", "abstract_train_state"]
+
+
+def init_train_state(cfg: ArchConfig, key) -> Dict[str, Any]:
+    params = lm.init_params(cfg, key)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def abstract_train_state(cfg: ArchConfig) -> Dict[str, Any]:
+    params = lm.abstract_params(cfg)
+    sd = lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype)
+    return {"params": params,
+            "opt": {"m": jax.tree.map(sd, params),
+                    "v": jax.tree.map(sd, params),
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: Optional[AdamWConfig] = None,
+                    block_causal: bool = True, attn_chunk: int = 512,
+                    compress_grads: bool = False,
+                    remat: bool = True) -> Callable:
+    opt_cfg = opt_cfg or AdamWConfig(schedule=cfg.lr_schedule)
+
+    def train_step(state, batch):
+        def loss(params):
+            return lm.loss_fn(params, cfg, batch["tokens"], batch["labels"],
+                              image_embed=batch.get("image_embed"),
+                              block_causal=block_causal,
+                              attn_chunk=attn_chunk, remat=remat)
+
+        loss_val, grads = jax.value_and_grad(loss)(state["params"])
+        if compress_grads:
+            grads = compress_decompress_grads(grads)
+        params, opt, om = adamw_update(opt_cfg, grads, state["opt"],
+                                       state["params"])
+        metrics = {"loss": loss_val, **om}
+        return {"params": params, "opt": opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, attn_chunk: int = 512,
+                      block_causal: bool = True) -> Callable:
+    """Batched prefill: logits for a full prompt (inference forward)."""
+
+    def prefill_step(params, batch):
+        logits, _ = lm.forward(params, cfg, batch["tokens"],
+                               image_embed=batch.get("image_embed"),
+                               block_causal=block_causal,
+                               attn_chunk=attn_chunk, remat=False)
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig) -> Callable:
+    """One-token serve step against a KV/SSM cache."""
+
+    def decode_step(params, token, cache, pos):
+        logits, cache = lm.decode_step(params, cfg, token, cache, pos)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, cache
+
+    return decode_step

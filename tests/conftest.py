@@ -1,0 +1,23 @@
+import numpy as np
+import pytest
+
+from repro.data.synthetic import gaussian_classes, train_test_split
+
+
+@pytest.fixture(scope="session")
+def small_cls_data():
+    X, y = gaussian_classes(1200, d=12, n_classes=4, seed=7)
+    return train_test_split(X, y, test_frac=0.2, seed=7)
+
+
+@pytest.fixture(scope="session")
+def rf_kernel_cache():
+    """One fitted ForestKernel per kernel_method, shared across tests."""
+    from repro.core.api import ForestKernel
+    X, y = gaussian_classes(900, d=10, n_classes=3, seed=3)
+    out = {}
+    for method in ["original", "kerf", "oob", "gap"]:
+        out[method] = ForestKernel(kernel_method=method, n_trees=15,
+                                   seed=0).fit(X, y)
+    out["_data"] = (X, y)
+    return out

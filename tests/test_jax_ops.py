@@ -1,0 +1,101 @@
+"""TPU-native SWLC ops (segment-sum factorization) vs the naive oracle,
+plus spectral layer properties — including hypothesis property tests.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.factorization import naive_swlc
+from repro.core.jax_ops import swlc_block, swlc_matmat, swlc_matvec, swlc_predict
+from repro.core.spectral import LeafPCA, kernel_eigs
+
+
+def _leafset(rng, n, T, lpt):
+    gl = rng.integers(0, lpt, (n, T)) + np.arange(T)[None, :] * lpt
+    return gl.astype(np.int32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 60), T=st.integers(1, 10), lpt=st.integers(1, 6),
+       seed=st.integers(0, 999))
+def test_swlc_matvec_property(n, T, lpt, seed):
+    rng = np.random.default_rng(seed)
+    gl = _leafset(rng, n, T, lpt)
+    q = rng.random((n, T))
+    w = rng.random((n, T))
+    v = rng.random(n)
+    P = naive_swlc(gl, gl, q, w)
+    got = swlc_matvec(jnp.asarray(gl), jnp.asarray(q, jnp.float32),
+                      jnp.asarray(w, jnp.float32), jnp.asarray(v, jnp.float32),
+                      T * lpt)
+    np.testing.assert_allclose(np.asarray(got), P @ v, rtol=2e-4, atol=2e-4)
+
+
+def test_swlc_matmat_and_block():
+    rng = np.random.default_rng(0)
+    n, T, lpt = 80, 12, 5
+    gl = _leafset(rng, n, T, lpt)
+    q = rng.random((n, T)).astype(np.float32)
+    w = rng.random((n, T)).astype(np.float32)
+    V = rng.random((n, 4)).astype(np.float32)
+    P = naive_swlc(gl, gl, q, w)
+    got = swlc_matmat(jnp.asarray(gl), jnp.asarray(q), jnp.asarray(w),
+                      jnp.asarray(V), T * lpt)
+    np.testing.assert_allclose(np.asarray(got), P @ V, rtol=2e-4, atol=2e-4)
+    B = swlc_block(jnp.asarray(gl[:16]), jnp.asarray(q[:16]),
+                   jnp.asarray(gl), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(B), P[:16], rtol=2e-4, atol=2e-4)
+
+
+def test_swlc_predict_oos():
+    rng = np.random.default_rng(1)
+    n, nq, T, lpt = 60, 9, 8, 4
+    gl_w = _leafset(rng, n, T, lpt)
+    gl_q = _leafset(rng, nq, T, lpt)
+    q = rng.random((nq, T)).astype(np.float32)
+    w = rng.random((n, T)).astype(np.float32)
+    Y = rng.random((n, 3)).astype(np.float32)
+    P = naive_swlc(gl_q, gl_w, q, w)
+    got = swlc_predict(jnp.asarray(gl_q), jnp.asarray(q), jnp.asarray(gl_w),
+                       jnp.asarray(w), jnp.asarray(Y), T * lpt)
+    np.testing.assert_allclose(np.asarray(got), P @ Y, rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------------- spectral
+def test_leafpca_matches_dense_svd(rf_kernel_cache):
+    fk = rf_kernel_cache["kerf"]
+    Q = fk.Q_
+    pca = LeafPCA(n_components=5).fit(Q)
+    Z = pca.transform(Q)
+    Qd = np.asarray(Q.todense())
+    Qc = Qd - Qd.mean(0)
+    _, s, vt = np.linalg.svd(Qc, full_matrices=False)
+    # singular values match; coordinates match up to sign
+    np.testing.assert_allclose(pca.singular_values_, s[:5], rtol=1e-6)
+    Zd = Qc @ vt[:5].T
+    for j in range(5):
+        c = np.corrcoef(Z[:, j], Zd[:, j])[0, 1]
+        assert abs(abs(c) - 1) < 1e-6
+
+
+def test_kernel_eigs_match_gram(rf_kernel_cache):
+    fk = rf_kernel_cache["kerf"]
+    vals, vecs = kernel_eigs(fk.Q_, k=4)
+    P = np.asarray(fk.kernel(set_diagonal=False).todense())
+    ev = np.linalg.eigvalsh(P)[::-1][:4]
+    np.testing.assert_allclose(vals, ev, rtol=1e-6, atol=1e-8)
+
+
+def test_leafpca_oos_transform(rf_kernel_cache):
+    fk = rf_kernel_cache["kerf"]
+    X, y = rf_kernel_cache["_data"]
+    pca = LeafPCA(n_components=4).fit(fk.Q_)
+    Zte = pca.transform(fk.query_map(X[:20] + 1e-4))
+    Ztr = pca.transform(fk.Q_)[:20]
+    # a perturbed training point embeds next to its source
+    d = np.linalg.norm(Zte - Ztr, axis=1)
+    spread = np.linalg.norm(Ztr - Ztr.mean(0), axis=1).mean()
+    assert (d < 0.35 * spread).mean() > 0.9

@@ -1,0 +1,158 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), with shape sweeps."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.data.synthetic import gaussian_classes
+from repro.forest.ensemble import RandomForest
+from repro.kernels.block_prox.ops import block_prox
+from repro.kernels.block_prox.ref import block_prox_ref
+from repro.kernels.histogram.ops import histogram
+from repro.kernels.histogram.ref import histogram_ref
+from repro.kernels.leaf_route import ops as route_ops
+from repro.kernels.leaf_route.ref import route_ref
+
+
+# ---------------------------------------------------------------- leaf_route
+@pytest.fixture(scope="module")
+def fitted_forest():
+    X, y = gaussian_classes(800, d=10, n_classes=3, seed=0)
+    rf = RandomForest(n_trees=8, seed=0).fit(X, y)
+    return rf, X
+
+
+def test_route_pallas_matches_numpy(fitted_forest):
+    rf, X = fitted_forest
+    ta = rf.tree_arrays()
+    expected = rf.apply(X)
+    got = route_ops.route(X, ta, block_n=128)
+    np.testing.assert_array_equal(got, expected)
+
+
+def test_route_ref_matches_numpy(fitted_forest):
+    rf, X = fitted_forest
+    ta = rf.tree_arrays()
+    got = route_ref(jnp.asarray(X, jnp.float32), jnp.asarray(ta.feature),
+                    jnp.asarray(ta.threshold), jnp.asarray(ta.left),
+                    jnp.asarray(ta.right), jnp.asarray(ta.leaf_id),
+                    ta.max_depth)
+    np.testing.assert_array_equal(np.asarray(got), rf.apply(X))
+
+
+@pytest.mark.parametrize("block_n", [32, 64, 256])
+def test_route_block_sizes(fitted_forest, block_n):
+    rf, X = fitted_forest
+    ta = rf.tree_arrays()
+    got = route_ops.route(X[:100], ta, block_n=block_n)
+    np.testing.assert_array_equal(got, rf.apply(X[:100]))
+
+
+# ---------------------------------------------------------------- block_prox
+def _rand_leafset(rng, n, T, leaves_per_tree):
+    gl = rng.integers(0, leaves_per_tree, (n, T)) + \
+        np.arange(T)[None, :] * leaves_per_tree
+    return gl.astype(np.int32)
+
+
+@pytest.mark.parametrize("nq,nw,T", [(64, 64, 8), (100, 50, 16), (17, 200, 5),
+                                     (256, 256, 40)])
+def test_block_prox_shapes(nq, nw, T):
+    rng = np.random.default_rng(nq + nw + T)
+    gl_q = _rand_leafset(rng, nq, T, 6)
+    gl_w = _rand_leafset(rng, nw, T, 6)
+    q = rng.random((nq, T)).astype(np.float32)
+    w = rng.random((nw, T)).astype(np.float32)
+    got = np.asarray(block_prox(gl_q, q, gl_w, w, block_q=64, block_w=64))
+    want = np.asarray(block_prox_ref(jnp.asarray(gl_q), jnp.asarray(q),
+                                     jnp.asarray(gl_w), jnp.asarray(w)))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_block_prox_padding_no_phantom_collisions():
+    """Padding sentinels must never produce collisions."""
+    rng = np.random.default_rng(0)
+    gl = _rand_leafset(rng, 5, 3, 4)          # tiny, heavy padding
+    q = np.ones((5, 3), np.float32)
+    got = np.asarray(block_prox(gl, q, gl, q, block_q=64, block_w=64))
+    want = np.asarray(block_prox_ref(jnp.asarray(gl), jnp.asarray(q),
+                                     jnp.asarray(gl), jnp.asarray(q)))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(nq=st.integers(1, 40), nw=st.integers(1, 40), T=st.integers(1, 12),
+       seed=st.integers(0, 2 ** 16))
+def test_block_prox_property(nq, nw, T, seed):
+    rng = np.random.default_rng(seed)
+    gl_q = _rand_leafset(rng, nq, T, 3)
+    gl_w = _rand_leafset(rng, nw, T, 3)
+    q = rng.random((nq, T)).astype(np.float32)
+    w = rng.random((nw, T)).astype(np.float32)
+    got = np.asarray(block_prox(gl_q, q, gl_w, w, block_q=32, block_w=32))
+    want = np.asarray(block_prox_ref(jnp.asarray(gl_q), jnp.asarray(q),
+                                     jnp.asarray(gl_w), jnp.asarray(w)))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_block_prox_matches_scipy_factorization(fitted_forest):
+    """End-to-end: Pallas block == CSR factorization block."""
+    from repro.core.api import ForestKernel
+    rf, X = fitted_forest
+    y = (X[:, 0] > 0).astype(int)
+    fk = ForestKernel(kernel_method="kerf", n_trees=10, seed=0).fit(X[:400], y[:400])
+    gl = fk.ctx.global_leaves()
+    qw = fk.assignment.query_weights(fk.ctx.leaves)
+    sub = np.arange(120)
+    got = np.asarray(block_prox(gl[sub], qw[sub], gl[sub], qw[sub]))
+    want = fk.kernel_block(sub, sub)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+# ----------------------------------------------------------------- histogram
+@pytest.mark.parametrize("n,d,nodes,bins,C", [
+    (300, 6, 4, 16, 3), (1000, 10, 8, 32, 7), (128, 3, 1, 8, 2),
+    (513, 5, 100, 16, 4),   # node chunking path
+])
+def test_histogram_shapes(n, d, nodes, bins, C):
+    rng = np.random.default_rng(n + d)
+    xb = rng.integers(0, bins, (n, d)).astype(np.int32)
+    node = rng.integers(0, nodes, n).astype(np.int32)
+    y = rng.integers(0, C, n).astype(np.int32)
+    w = rng.random(n).astype(np.float32)
+    got = np.asarray(histogram(xb, node, y, w, nodes, bins, C, tile=256))
+    want = np.asarray(histogram_ref(jnp.asarray(xb), jnp.asarray(node),
+                                    jnp.asarray(y), jnp.asarray(w),
+                                    nodes, bins, C))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_histogram_total_mass():
+    """Σ hist over (bin, class) = Σ weights per node, for every feature."""
+    rng = np.random.default_rng(3)
+    n, d, nodes, bins, C = 400, 4, 6, 16, 3
+    xb = rng.integers(0, bins, (n, d)).astype(np.int32)
+    node = rng.integers(0, nodes, n).astype(np.int32)
+    y = rng.integers(0, C, n).astype(np.int32)
+    w = rng.random(n).astype(np.float32)
+    h = np.asarray(histogram(xb, node, y, w, nodes, bins, C))
+    per_node = np.bincount(node, weights=w, minlength=nodes)
+    for f in range(d):
+        np.testing.assert_allclose(h[:, f].sum((1, 2)), per_node, rtol=1e-5)
+
+
+def test_histogram_matches_trainer_bincount():
+    """Pallas histogram == the numpy trainer's bincount histogram."""
+    rng = np.random.default_rng(5)
+    n, d, bins, C = 600, 5, 12, 3
+    xb = rng.integers(0, bins, (n, d)).astype(np.int32)
+    node = rng.integers(0, 3, n).astype(np.int32)
+    y = rng.integers(0, C, n).astype(np.int32)
+    w = np.ones(n, np.float32)
+    flat = ((node[:, None] * d + np.arange(d)[None, :]) * bins + xb) * C + y[:, None]
+    want = np.bincount(flat.ravel(), weights=np.repeat(w, d),
+                       minlength=3 * d * bins * C).reshape(3, d, bins, C)
+    got = np.asarray(histogram(xb, node, y, w, 3, bins, C))
+    np.testing.assert_allclose(got, want, rtol=1e-6)

@@ -1,0 +1,126 @@
+"""Per-architecture smoke tests: reduced config, forward + train step +
+decode on CPU, asserting output shapes and finiteness (brief deliverable f).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ALL_ARCHS, SHAPES, applicable_shapes, get_config
+from repro.models import lm
+from repro.train.optimizer import AdamWConfig
+from repro.train.steps import init_train_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_shapes_and_finite(arch, key):
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(cfg, key)
+    B, S = 2, 32
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    img = (jax.random.normal(key, (B, cfg.prefix_len, cfg.d_model))
+           if cfg.family == "vlm" else None)
+    logits, aux = lm.forward(params, cfg, tokens, image_embed=img, attn_chunk=8)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step_reduces_loss(arch, key):
+    cfg = get_config(arch).reduced()
+    state = init_train_state(cfg, key)
+    step = jax.jit(make_train_step(
+        cfg, AdamWConfig(lr=1e-2, warmup_steps=1, total_steps=100,
+                         schedule="const"), attn_chunk=8))
+    B, S = 2, 16
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "vlm":
+        batch["image_embed"] = jax.random.normal(
+            key, (B, cfg.prefix_len, cfg.d_model))
+    losses = []
+    for _ in range(5):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0], losses   # same batch -> must memorize
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_matches_forward(arch, key):
+    """Greedy decode logits must match teacher-forced forward logits."""
+    import dataclasses
+    cfg = get_config(arch).reduced()
+    if cfg.family == "vlm":
+        pytest.skip("vlm decode requires prefix prefill plumbing")
+    if cfg.family == "moe":
+        # capacity truncation differs between teacher-forced (B·S tokens
+        # compete) and incremental (B tokens) dispatch — an inherent
+        # property of capacity-based MoE.  Compare drop-free.
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = lm.init_params(cfg, key)
+    B, S = 2, 12
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    full_logits, _ = lm.forward(params, cfg, tokens, attn_chunk=4,
+                                remat=False)
+    cache = lm.init_cache(cfg, B, 32, dtype=jnp.float32)
+    outs = []
+    for pos in range(S):
+        lg, cache = lm.decode_step(params, cfg, tokens[:, pos:pos + 1],
+                                   cache, jnp.int32(pos))
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    # bf16 compute: compare argmax agreement + loose numeric tolerance
+    agree = (full_logits.argmax(-1) == dec_logits.argmax(-1)).mean()
+    assert agree > 0.9, agree
+
+
+def test_applicable_shapes_policy():
+    assert len(applicable_shapes(get_config("mamba2_2p7b"))) == 4
+    assert len(applicable_shapes(get_config("hymba_1p5b"))) == 4
+    assert len(applicable_shapes(get_config("granite_8b"))) == 3
+    names = {c.name for c in applicable_shapes(get_config("command_r_35b"))}
+    assert "long_500k" not in names
+
+
+def test_param_counts_match_public_sizes():
+    """Analytic parameter counts should land near the advertised sizes."""
+    expect = {
+        "granite_34b": 34e9, "granite_8b": 8e9, "command_r_35b": 35e9,
+        "mamba2_2p7b": 2.7e9, "minicpm_2b": 2.7e9,
+        "qwen3_moe_235b_a22b": 235e9, "musicgen_large": 3.3e9,
+        "paligemma_3b": 2.6e9, "hymba_1p5b": 1.5e9,
+        "granite_moe_3b_a800m": 3.4e9,
+    }
+    for arch, target in expect.items():
+        got = get_config(arch).param_count()
+        assert 0.6 * target < got < 1.6 * target, (arch, got, target)
+
+
+def test_moe_load_balance_aux_positive(key):
+    cfg = get_config("qwen3_moe_235b_a22b").reduced()
+    params = lm.init_params(cfg, key)
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    _, aux = lm.forward(params, cfg, tokens, attn_chunk=8)
+    assert float(aux) > 0.0
+
+
+def test_hymba_global_vs_swa_differs(key):
+    """Global-attention layers must actually see beyond the window."""
+    cfg = get_config("hymba_1p5b").reduced()
+    assert cfg.window and cfg.global_layers
+    params = lm.init_params(cfg, key)
+    S = 64   # > reduced window of 16
+    t1 = jax.random.randint(key, (1, S), 0, cfg.vocab)
+    # perturb an early token (outside every SWA window of the last position)
+    t2 = t1.at[0, 1].set((t1[0, 1] + 7) % cfg.vocab)
+    l1, _ = lm.forward(params, cfg, t1, attn_chunk=8, remat=False)
+    l2, _ = lm.forward(params, cfg, t2, attn_chunk=8, remat=False)
+    # the final position can only differ through global attention / SSM state
+    assert float(jnp.abs(l1[0, -1] - l2[0, -1]).max()) > 0

@@ -22,9 +22,8 @@ import scipy.sparse as sp
 from ..forest.ensemble import (BaseForest, ExtraTrees, GradientBoostedTrees,
                                RandomForest)
 from .context import EnsembleContext
-from .factorization import (full_kernel, kernel_block, kernel_matvec_operator,
-                            proximity_predict, topk_neighbors)
-from .leafmap import build_leaf_map, sparse_bytes
+from .engine import ProximityEngine
+from .leafmap import sparse_bytes
 from .spectral import LeafPCA
 from .weights import WeightAssignment, get_assignment
 
@@ -49,10 +48,14 @@ class ForestKernel:
     n_bins: int = 64
     seed: int = 0
     dtype: type = np.float64
+    engine_backend: str = "scipy"    # 'scipy' | 'jax' | 'pallas'
+    routing_backend: str = "auto"    # 'auto'|'native'|'numpy'|'jax'|'pallas'
+    n_jobs: int = 0                  # tree-fitting workers (0 = auto)
 
     forest: Optional[BaseForest] = None
     ctx: Optional[EnsembleContext] = None
     assignment: Optional[WeightAssignment] = None
+    engine: Optional[ProximityEngine] = None
     Q_: Optional[sp.csr_matrix] = None   # training query map (N, L)
     W_: Optional[sp.csr_matrix] = None   # reference map (N, L)
 
@@ -63,7 +66,8 @@ class ForestKernel:
             n_trees=self.n_trees, max_depth=self.max_depth,
             min_samples_leaf=self.min_samples_leaf,
             max_features=self.max_features, n_bins=self.n_bins,
-            task=self.task, seed=self.seed)
+            task=self.task, seed=self.seed, n_jobs=self.n_jobs,
+            routing_backend=self.routing_backend)
         self.forest.fit(X, y)
         return self
 
@@ -71,14 +75,12 @@ class ForestKernel:
         assert self.forest is not None, "call fit_forest first"
         self.ctx = EnsembleContext.from_forest(self.forest)
         self.assignment = get_assignment(self.kernel_method, self.ctx)
-        gl = self.ctx.global_leaves()
-        q = self.assignment.query_weights(self.ctx.leaves)
-        self.Q_ = build_leaf_map(gl, q, self.ctx.total_leaves, self.dtype)
-        if self.assignment.symmetric:
-            self.W_ = self.Q_
-        else:
-            w = self.assignment.reference_weights(self.ctx.leaves)
-            self.W_ = build_leaf_map(gl, w, self.ctx.total_leaves, self.dtype)
+        self.engine = ProximityEngine(self.ctx, self.assignment,
+                                      forest=self.forest,
+                                      backend=self.engine_backend,
+                                      dtype=self.dtype)
+        self.Q_ = self.engine.Q
+        self.W_ = self.engine.W
         return self
 
     def fit(self, X: np.ndarray, y: np.ndarray) -> "ForestKernel":
@@ -89,42 +91,38 @@ class ForestKernel:
         return self.W_
 
     def query_map(self, X: Optional[np.ndarray] = None) -> sp.csr_matrix:
-        """Training query map (X=None) or OOS query map for new samples."""
-        if X is None:
-            return self.Q_
-        leaves = self.forest.apply(X)
-        q = self.assignment.oos_query_weights(leaves)
-        gl = self.ctx.global_leaves(leaves)
-        return build_leaf_map(gl, q, self.ctx.total_leaves, self.dtype)
+        """Training query map (X=None) or OOS query map for new samples.
+
+        OOS states (routing + weights + CSR) are cached in the engine, so
+        repeated calls on the same batch are free.
+        """
+        return self.engine.query_state(X).Q
 
     # ---------------- kernel ops ----------------
     def kernel(self, set_diagonal: bool = True) -> sp.csr_matrix:
         d = self.assignment.diagonal if set_diagonal else None
-        return full_kernel(self.Q_, self.W_, diagonal=d)
+        return self.engine.full_kernel(diagonal=d)
 
     def kernel_block(self, rows: np.ndarray, cols: Optional[np.ndarray] = None,
                      X_rows: Optional[np.ndarray] = None) -> np.ndarray:
-        Q = self.Q_ if X_rows is None else self.query_map(X_rows)
-        r = np.arange(Q.shape[0]) if X_rows is not None else rows
-        return kernel_block(Q, self.W_, r, cols)
+        r = None if X_rows is not None else rows
+        return self.engine.kernel_block(r, cols, X_rows=X_rows)
 
     def operator(self):
-        return kernel_matvec_operator(self.Q_, self.W_)
+        return self.engine.operator()
 
     def topk(self, k: int = 10):
-        return topk_neighbors(self.Q_, self.W_, k)
+        return self.engine.topk(k)
 
     # ---------------- downstream ----------------
     def predict(self, X: Optional[np.ndarray] = None) -> np.ndarray:
         """Proximity-weighted prediction (train-set if X is None, else OOS)."""
-        Qq = self.Q_ if X is None else self.query_map(X)
         y = self.ctx.y
         if self.task == "classification":
-            n_classes = self.forest.n_classes_
-            scores = proximity_predict(Qq, self.W_, y, n_classes=n_classes,
-                                       exclude_self=(X is None))
+            scores = self.engine.predict(y, n_classes=self.forest.n_classes_,
+                                         X=X)
             return scores.argmax(1)
-        return proximity_predict(Qq, self.W_, y, exclude_self=(X is None))
+        return self.engine.predict(y, X=X)
 
     def leaf_pca(self, n_components: int = 50) -> LeafPCA:
         return LeafPCA(n_components=n_components).fit(self.Q_)

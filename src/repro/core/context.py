@@ -51,11 +51,12 @@ class EnsembleContext:
                     y: Optional[np.ndarray] = None) -> "EnsembleContext":
         X = forest.X_ if X is None else X
         y = forest.y_ if y is None else y
-        leaves = forest.apply(X)                      # (N, T)
+        leaves = forest.apply(X)                      # (N, T) — batched pass
         n, T = leaves.shape
-        n_leaves = np.asarray([t.n_leaves for t in forest.trees_], dtype=np.int32)
-        leaf_offset = np.concatenate([[0], np.cumsum(n_leaves)[:-1]]).astype(np.int64)
-        L = int(n_leaves.sum())
+        ta = forest.tree_arrays()                     # cached at fit time
+        n_leaves = ta.n_leaves
+        leaf_offset = ta.leaf_offset
+        L = ta.total_leaves
         gl = leaves.astype(np.int64) + leaf_offset[None, :]
         leaf_mass = np.bincount(gl.ravel(), minlength=L).astype(np.float64)
 

@@ -23,12 +23,21 @@ __all__ = ["full_kernel", "kernel_block", "kernel_matvec_operator",
 
 def full_kernel(Q: sp.csr_matrix, W: sp.csr_matrix,
                 diagonal: Optional[float] = None) -> sp.csr_matrix:
-    """Materialize the full sparse proximity matrix P = Q Wᵀ."""
+    """Materialize the full sparse proximity matrix P = Q Wᵀ.
+
+    The diagonal override is applied by adding a diagonal correction in
+    COO/CSR form — an O(nnz) merge that never round-trips the whole matrix
+    through LIL.
+    """
     P = (Q @ W.T).tocsr()
     if diagonal is not None:
-        P = P.tolil()
-        P.setdiag(diagonal)
-        P = P.tocsr()
+        n = min(P.shape)
+        ii = np.arange(n)
+        delta = diagonal - P.diagonal()
+        D = sp.csr_matrix((delta, (ii, ii)), shape=P.shape)
+        P = (P + D).tocsr()
+        if diagonal == 0.0:
+            P.eliminate_zeros()
     return P
 
 

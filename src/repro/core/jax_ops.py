@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["swlc_matvec", "swlc_matmat", "swlc_block", "swlc_predict",
-           "sharded_swlc_matmat"]
+           "swlc_topk", "sharded_swlc_matmat"]
 
 
 @functools.partial(jax.jit, static_argnames=("total_leaves",))
@@ -46,14 +46,49 @@ def swlc_matmat(gl: jax.Array, q: jax.Array, w: jax.Array, V: jax.Array,
     return (q[:, :, None] * s[gl]).sum(axis=1)
 
 
+@functools.partial(jax.jit, static_argnames=("t_chunk",))
 def swlc_block(gl_q: jax.Array, q: jax.Array, gl_w: jax.Array,
-               w: jax.Array) -> jax.Array:
+               w: jax.Array, t_chunk: int = 8) -> jax.Array:
     """Dense proximity block: P[i,j] = Σ_t q[i,t] w[j,t] 1[gl_q[i,t]=gl_w[j,t]].
 
-    Pure-jnp reference for the Pallas block kernel (B_q·B_r·T work).
+    Accumulates over tree chunks (like the Pallas block kernel) so the
+    intermediate is (B_q, B_w, t_chunk) instead of (B_q, B_w, T) —
+    B_q·B_r·T work at bounded memory.
     """
-    coll = gl_q[:, None, :] == gl_w[None, :, :]
-    return jnp.einsum("it,jt,ijt->ij", q, w, coll.astype(q.dtype))
+    nq, T = gl_q.shape
+    pad = (-T) % t_chunk
+    if pad:
+        # collision-free sentinel trees: -1 never equals -2
+        gl_q = jnp.pad(gl_q, ((0, 0), (0, pad)), constant_values=-1)
+        gl_w = jnp.pad(gl_w, ((0, 0), (0, pad)), constant_values=-2)
+        q = jnp.pad(q, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+
+    def body(c, acc):
+        s = c * t_chunk
+        gq = jax.lax.dynamic_slice_in_dim(gl_q, s, t_chunk, axis=1)
+        gw = jax.lax.dynamic_slice_in_dim(gl_w, s, t_chunk, axis=1)
+        qq = jax.lax.dynamic_slice_in_dim(q, s, t_chunk, axis=1)
+        ww = jax.lax.dynamic_slice_in_dim(w, s, t_chunk, axis=1)
+        coll = gq[:, None, :] == gw[None, :, :]
+        contrib = jnp.where(coll, qq[:, None, :] * ww[None, :, :], 0)
+        return acc + contrib.sum(axis=-1)
+
+    acc0 = jnp.zeros((nq, gl_w.shape[0]), dtype=q.dtype)
+    return jax.lax.fori_loop(0, (T + pad) // t_chunk, body, acc0)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def swlc_topk(gl_q: jax.Array, q: jax.Array, gl_w: jax.Array, w: jax.Array,
+              k: int) -> Tuple[jax.Array, jax.Array]:
+    """Top-k proximities of each query row against the reference set.
+
+    Materializes only the (B_q, N_w) block for the given query rows and
+    reduces it with ``lax.top_k`` on device — the streaming building block
+    of the engine's jax/pallas ``topk``.  Returns (values, indices).
+    """
+    B = swlc_block(gl_q, q, gl_w, w)
+    return jax.lax.top_k(B, k)
 
 
 def swlc_predict(gl_q, q, gl_w, w, Y, total_leaves: int) -> jax.Array:

@@ -8,15 +8,41 @@ OOB masks, leaf masses, tree weights) that the SWLC weight assignments in
 from __future__ import annotations
 
 import dataclasses
+import os
+from concurrent.futures import ThreadPoolExecutor
 from typing import List, Optional
 
 import numpy as np
 
 from .bootstrap import bootstrap_counts, oob_mask
-from .trees import Tree, TreeArrays, route_forest_numpy
+from .trees import (Tree, TreeArrays, route_forest_batched, route_tree,
+                    stack_leaf_values)
 from .training import Binner, TreeParams, fit_tree_binned
 
 __all__ = ["RandomForest", "ExtraTrees", "GradientBoostedTrees", "BaseForest"]
+
+
+def _resolve_jobs(n_jobs: Optional[int], n_tasks: int) -> int:
+    if n_jobs is None or n_jobs == 0:
+        n_jobs = min(8, os.cpu_count() or 1)
+    return max(1, min(n_jobs, n_tasks))
+
+
+def _chunked_gather_mean(table: np.ndarray, gl: np.ndarray,
+                         weights: Optional[np.ndarray] = None,
+                         mean: bool = True, chunk: int = 8192) -> np.ndarray:
+    """Σ_t table[gl[i, t]] (optionally × weights[i, t]), chunked over samples
+    so the (chunk, T, C) gather stays cache/memory friendly."""
+    n, T = gl.shape
+    out = np.empty((n, table.shape[1]), dtype=np.float64)
+    for i0 in range(0, n, chunk):
+        i1 = min(i0 + chunk, n)
+        g = table[gl[i0:i1]]                               # (c, T, C)
+        if weights is not None:
+            out[i0:i1] = np.einsum("ntc,nt->nc", g, weights[i0:i1])
+        else:
+            out[i0:i1] = g.sum(axis=1)
+    return out / T if mean else out
 
 
 @dataclasses.dataclass
@@ -31,6 +57,8 @@ class BaseForest:
     task: str = "classification"
     seed: int = 0
     splitter: str = "best"
+    n_jobs: int = 0                  # 0 -> auto (min(8, cpus)), 1 -> serial
+    routing_backend: str = "auto"    # 'auto'|'native'|'numpy'|'jax'|'pallas'
 
     # fitted state
     trees_: Optional[List[Tree]] = None
@@ -40,6 +68,9 @@ class BaseForest:
     X_: Optional[np.ndarray] = None
     y_: Optional[np.ndarray] = None
     tree_weights_: Optional[np.ndarray] = None   # (T,) — for boosted proximities
+    tree_arrays_: Optional[TreeArrays] = None    # padded SoA, cached at fit
+    leaf_values_: Optional[np.ndarray] = None    # (L, value_dim) global table
+    leaf_probs_: Optional[np.ndarray] = None     # (L, C) normalized (classif.)
 
     def _params(self) -> TreeParams:
         return TreeParams(
@@ -63,55 +94,70 @@ class BaseForest:
         Xb = self.binner_.transform(X)
         self.inbag_ = bootstrap_counts(len(X), self.n_trees, rng, self.bootstrap)
         params = self._params()
-        self.trees_ = []
-        for t in range(self.n_trees):
+        # Independent per-tree RNG streams (SeedSequence spawn) keep results
+        # deterministic under any worker-pool schedule.
+        child_rngs = rng.spawn(self.n_trees)
+
+        def fit_one(t: int) -> Tree:
             w = self.inbag_[t]
             sel = np.nonzero(w)[0]
-            tr = fit_tree_binned(Xb[sel], y[sel], w[sel].astype(np.float64),
-                                 params, rng, self.binner_)
-            self.trees_.append(tr)
+            return fit_tree_binned(Xb[sel], y[sel], w[sel].astype(np.float64),
+                                   params, child_rngs[t], self.binner_)
+
+        jobs = _resolve_jobs(self.n_jobs, self.n_trees)
+        if jobs == 1:
+            self.trees_ = [fit_one(t) for t in range(self.n_trees)]
+        else:
+            with ThreadPoolExecutor(max_workers=jobs) as ex:
+                self.trees_ = list(ex.map(fit_one, range(self.n_trees)))
         self.tree_weights_ = np.ones(self.n_trees, dtype=np.float64)
+        self._cache_tables()
         return self
+
+    def _cache_tables(self) -> None:
+        """Build the routing SoA + global leaf-value tables once, at fit."""
+        self.tree_arrays_ = TreeArrays.from_trees(self.trees_)
+        self.leaf_values_ = stack_leaf_values(self.trees_)
+        if self.task == "classification" and self.n_classes_:
+            v = self.leaf_values_
+            self.leaf_probs_ = v / np.maximum(v.sum(1, keepdims=True), 1e-12)
+        else:
+            self.leaf_probs_ = None
 
     # ----- routing / prediction -----
     def apply(self, X: np.ndarray) -> np.ndarray:
-        """(N, T) within-tree leaf ids."""
-        return route_forest_numpy(self.trees_, np.asarray(X, dtype=np.float64))
+        """(N, T) within-tree leaf ids — one batched pass, no per-tree loop."""
+        return route_forest_batched(self.tree_arrays(),
+                                    np.asarray(X, dtype=np.float64),
+                                    backend=self.routing_backend)
 
     def tree_arrays(self) -> TreeArrays:
-        return TreeArrays.from_trees(self.trees_)
+        if self.tree_arrays_ is None:
+            self._cache_tables()
+        return self.tree_arrays_
+
+    def _global_leaves(self, leaves: np.ndarray) -> np.ndarray:
+        return leaves.astype(np.int64) + \
+            self.tree_arrays().leaf_offset[None, :]
 
     def predict_proba(self, X: np.ndarray) -> np.ndarray:
-        leaves = self.apply(X)
-        out = np.zeros((len(X), self.n_classes_))
-        for t, tr in enumerate(self.trees_):
-            vals = tr.leaf_values()                       # (L_t, C) counts
-            p = vals / np.maximum(vals.sum(1, keepdims=True), 1e-12)
-            out += p[leaves[:, t]]
-        return out / len(self.trees_)
+        gl = self._global_leaves(self.apply(X))
+        return _chunked_gather_mean(self.leaf_probs_, gl)
 
     def predict(self, X: np.ndarray) -> np.ndarray:
         if self.task == "classification":
             return self.predict_proba(X).argmax(1)
-        leaves = self.apply(X)
-        out = np.zeros(len(X))
-        for t, tr in enumerate(self.trees_):
-            out += tr.leaf_values()[leaves[:, t], 1]      # (count, mean)
-        return out / len(self.trees_)
+        gl = self._global_leaves(self.apply(X))
+        means = self.leaf_values_[:, 1]                    # (count, mean)
+        return means[gl].mean(axis=1)
 
     def oob_predict(self, X: Optional[np.ndarray] = None) -> np.ndarray:
         """Forest OOB predictions on the training set (classification)."""
-        leaves = self.apply(self.X_ if X is None else X)
-        oob = oob_mask(self.inbag_)                        # (T, N)
-        probs = np.zeros((leaves.shape[0], self.n_classes_))
-        denom = np.zeros(leaves.shape[0])
-        for t, tr in enumerate(self.trees_):
-            vals = tr.leaf_values()
-            p = vals / np.maximum(vals.sum(1, keepdims=True), 1e-12)
-            m = oob[t].astype(np.float64)
-            probs += p[leaves[:, t]] * m[:, None]
-            denom += m
-        return probs / np.maximum(denom[:, None], 1e-12)
+        gl = self._global_leaves(self.apply(self.X_ if X is None else X))
+        m = oob_mask(self.inbag_).T.astype(np.float64)     # (N, T)
+        probs = _chunked_gather_mean(self.leaf_probs_, gl, weights=m,
+                                     mean=False)
+        return probs / np.maximum(m.sum(1)[:, None], 1e-12)
 
 
 class RandomForest(BaseForest):
@@ -177,21 +223,20 @@ class GradientBoostedTrees(BaseForest):
             tr = fit_tree_binned(Xb[sel], resid[sel], w[sel].astype(np.float64),
                                  params, rng, self.binner_)
             self.trees_.append(tr)
-            leaves = route_forest_numpy([tr], X)[:, 0]
+            leaves = route_tree(tr, X)
             F = F + self.learning_rate * tr.leaf_values()[leaves, 1]
             cur = loss(F)
             tw.append(max(prev - cur, 0.0))
             prev = cur
         tw = np.asarray(tw)
         self.tree_weights_ = tw / max(tw.sum(), 1e-12)
+        self._cache_tables()
         return self
 
     def decision_function(self, X: np.ndarray) -> np.ndarray:
-        leaves = self.apply(X)
-        F = np.full(len(X), self.base_score_)
-        for t, tr in enumerate(self.trees_):
-            F += self.learning_rate * tr.leaf_values()[leaves[:, t], 1]
-        return F
+        gl = self._global_leaves(self.apply(X))
+        means = self.leaf_values_[:, 1]
+        return self.base_score_ + self.learning_rate * means[gl].sum(axis=1)
 
     def predict(self, X: np.ndarray) -> np.ndarray:
         F = self.decision_function(X)

@@ -25,7 +25,8 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-__all__ = ["Tree", "TreeArrays", "route_tree", "route_forest_numpy"]
+__all__ = ["Tree", "TreeArrays", "route_tree", "route_forest_numpy",
+           "route_forest_batched", "stack_leaf_values"]
 
 
 @dataclasses.dataclass
@@ -91,11 +92,118 @@ def route_tree(tree: Tree, X: np.ndarray) -> np.ndarray:
 
 
 def route_forest_numpy(trees: Sequence[Tree], X: np.ndarray) -> np.ndarray:
-    """Leaf ids for every (sample, tree): returns (N, T) int32 array."""
+    """Leaf ids for every (sample, tree): returns (N, T) int32 array.
+
+    Per-tree reference loop — kept as the test oracle.  Hot paths use
+    :func:`route_forest_batched`.
+    """
     out = np.empty((X.shape[0], len(trees)), dtype=np.int32)
     for t, tree in enumerate(trees):
         out[:, t] = route_tree(tree, X)
     return out
+
+
+def _route_batched_numpy(ta: "TreeArrays", X: np.ndarray) -> np.ndarray:
+    """One vectorized pass advancing all (sample, tree) lanes at once.
+
+    Lanes are kept **tree-major** (lane = t·N + i) and compacted to the
+    still-internal set each level, so (a) total work is
+    Σ_{i,t} depth(leaf_t(x_i)) — strictly less than the per-tree loop, which
+    pays full tree depth for every sample — and (b) every gather walks its
+    array in near-sorted order: node-table reads stay inside one tree's
+    cache-resident slice and the X reads stream forward.  Each lane's leaf
+    is written exactly once, when it finishes.
+    """
+    n, d = X.shape
+    T, M = ta.feature.shape
+    feature_f, threshold_f, lr, leaf_f = ta.flat()
+    Xf = np.ascontiguousarray(X, dtype=np.float64).ravel()
+
+    # int32 lane indices are ~2x faster; fall back to int64 when the lane
+    # count or the flat X index could overflow.
+    idx_dt = np.int32 if max(T * n, n * d) < np.iinfo(np.int32).max \
+        else np.int64
+    out = np.empty(T * n, dtype=np.int32)
+    cur = np.repeat(np.arange(T, dtype=idx_dt) * M, n)       # roots, (T·N,)
+    xbase = np.tile(np.arange(n, dtype=idx_dt) * d, T)
+    outidx = np.arange(T * n, dtype=idx_dt)
+    fa = feature_f[cur]
+    done = fa < 0
+    if done.any():                                           # stump trees
+        out[outidx[done]] = leaf_f[cur[done]]
+        keep = ~done
+        cur, xbase, outidx, fa = (cur[keep], xbase[keep],
+                                  outidx[keep], fa[keep])
+    # Children ids strictly exceed the parent's, so traversal terminates in
+    # at most M steps; the cap only guards hand-built malformed trees.
+    for _ in range(M):
+        if cur.size == 0:
+            break
+        # ~(x <= thr), not (x > thr): NaN features must go right, exactly
+        # like the route_tree oracle's `go_left = x <= thr`.
+        go_right = ~(Xf[xbase + fa] <= threshold_f[cur])
+        nxt = lr[2 * cur + go_right]
+        fa = feature_f[nxt]
+        done = fa < 0
+        if done.any():
+            out[outidx[done]] = leaf_f[nxt[done]]
+            keep = ~done
+            cur = nxt[keep]
+            xbase, outidx, fa = xbase[keep], outidx[keep], fa[keep]
+        else:
+            cur = nxt
+    return np.ascontiguousarray(out.reshape(T, n).T)
+
+
+def route_forest_batched(ta: "TreeArrays", X: np.ndarray,
+                         backend: str = "auto",
+                         block_n: int = 1024) -> np.ndarray:
+    """(N, T) within-tree leaf ids via one batched pass over the ensemble.
+
+    backend:
+      "auto"    native C kernel when a host compiler is available, else the
+                numpy path (both bit-identical to the ``route_tree`` oracle)
+      "native"  lazily-compiled C kernel (ctypes); error if no compiler
+      "numpy"   vectorized gather/compare/select with an active-lane set
+      "jax"     jit'd vmap reference (float32 — TPU-native precision)
+      "pallas"  TPU routing kernel; interpret mode off-TPU (float32)
+    """
+    X = np.asarray(X, dtype=np.float64)
+    if X.ndim != 2:
+        raise ValueError(f"X must be (N, D), got {X.shape}")
+    need = int(ta.feature.max(initial=-1)) + 1
+    if X.shape[1] < need:
+        # Flat-index routing would silently read out of row bounds here;
+        # fail loudly like the per-tree oracle does.
+        raise ValueError(f"X has {X.shape[1]} features but the ensemble "
+                         f"splits on feature {need - 1}")
+    if backend in ("auto", "native"):
+        from . import _native
+        if _native.available():
+            T, M = ta.feature.shape
+            return _native.route_native(*ta.flat(), T, M, X)
+        if backend == "native":
+            raise RuntimeError("native routing backend unavailable "
+                               "(no working C compiler)")
+        backend = "numpy"
+    if backend == "numpy":
+        return _route_batched_numpy(ta, X)
+    if backend in ("jax", "pallas"):
+        from ..kernels.leaf_route.ops import route
+        return route(X, ta, block_n=block_n, use_pallas=(backend == "pallas"))
+    raise ValueError(f"unknown routing backend {backend!r}; have "
+                     "'auto' | 'native' | 'numpy' | 'jax' | 'pallas'")
+
+
+def stack_leaf_values(trees: Sequence[Tree]) -> np.ndarray:
+    """(L, value_dim) float64 global leaf-value table, tree-major.
+
+    Row ``leaf_offset[t] + leaf_id`` holds tree t's payload for that leaf, so
+    ensemble aggregation is a single gather ``table[global_leaves]`` instead
+    of a per-tree loop.
+    """
+    return np.concatenate([t.leaf_values().astype(np.float64) for t in trees],
+                          axis=0)
 
 
 @dataclasses.dataclass
@@ -114,6 +222,8 @@ class TreeArrays:
     n_leaves: np.ndarray    # (T,) int32
     leaf_offset: np.ndarray  # (T,) int64 — global leaf index base per tree
     max_depth: int
+    _flat: Optional[tuple] = dataclasses.field(default=None, repr=False,
+                                               compare=False)
 
     @property
     def n_trees(self) -> int:
@@ -122,6 +232,27 @@ class TreeArrays:
     @property
     def total_leaves(self) -> int:
         return int(self.n_leaves.sum())
+
+    def flat(self) -> tuple:
+        """Flattened node arrays with *global* node ids (tree t's node n at
+        ``t * max_nodes + n``), so batched routing is pure 1-D gathers.
+        Children are interleaved as ``lr[2g] = left, 2g+1 = right`` so the
+        advance step is a single gather indexed by the compare bit.
+        """
+        if self._flat is None:
+            T, M = self.feature.shape
+            if 2 * T * M >= np.iinfo(np.int32).max:
+                raise ValueError("ensemble too large for int32 node ids")
+            base = (np.arange(T, dtype=np.int32) * M)[:, None]
+            feature_f = np.ascontiguousarray(self.feature.ravel())
+            threshold_f = np.ascontiguousarray(
+                self.threshold.ravel().astype(np.float64))
+            lr = np.empty(2 * T * M, dtype=np.int32)
+            lr[0::2] = (self.left + base).ravel()
+            lr[1::2] = (self.right + base).ravel()
+            leaf_f = np.ascontiguousarray(self.leaf_id.ravel())
+            self._flat = (feature_f, threshold_f, lr, leaf_f)
+        return self._flat
 
     @classmethod
     def from_trees(cls, trees: Sequence[Tree]) -> "TreeArrays":

@@ -46,16 +46,21 @@ def _block_prox_kernel(glq_ref, q_ref, glw_ref, w_ref, out_ref, *, t_chunk: int)
         return acc + contrib.sum(axis=-1)
 
     acc = jax.lax.fori_loop(0, nchunks, body,
-                            jnp.zeros((bq, bw), dtype=jnp.float32))
+                            jnp.zeros((bq, bw), dtype=qv.dtype))
     out_ref[...] = acc
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_q", "block_w", "t_chunk", "interpret"))
+                   static_argnames=("block_q", "block_w", "t_chunk",
+                                    "interpret", "dtype"))
 def block_prox_pallas(gl_q: jax.Array, q: jax.Array, gl_w: jax.Array,
                       w: jax.Array, block_q: int = 256, block_w: int = 256,
-                      t_chunk: int = 8, interpret: bool = False) -> jax.Array:
-    """(Nq, Nw) float32 proximity block; inputs as in ``ref.block_prox_ref``."""
+                      t_chunk: int = 8, interpret: bool = False,
+                      dtype=jnp.float32) -> jax.Array:
+    """(Nq, Nw) proximity block in ``dtype``; inputs as in ``ref.block_prox_ref``.
+
+    float64 requires jax x64 mode and is only supported off-TPU (interpret).
+    """
     nq, T = gl_q.shape
     nw = gl_w.shape[0]
     # pad T to a multiple of t_chunk with a collision-free sentinel tree
@@ -86,7 +91,7 @@ def block_prox_pallas(gl_q: jax.Array, q: jax.Array, gl_w: jax.Array,
             pl.BlockSpec((block_w, t_pad), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((block_q, block_w), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((nq_pad, nw_pad), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((nq_pad, nw_pad), dtype),
         interpret=interpret,
-    )(gl_q, q.astype(jnp.float32), gl_w, w.astype(jnp.float32))
+    )(gl_q, q.astype(dtype), gl_w, w.astype(dtype))
     return out[:nq, :nw]

@@ -12,13 +12,18 @@ __all__ = ["block_prox"]
 
 
 def block_prox(gl_q, q, gl_w, w, block_q: int = 256, block_w: int = 256,
-               use_pallas: bool = True) -> jax.Array:
+               use_pallas: bool = True, dtype=jnp.float32) -> jax.Array:
+    """``dtype`` selects the accumulator/output precision; float64 needs jax
+    x64 mode and falls back to float32 on real TPUs (no f64 VPU support)."""
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu and dtype == jnp.float64:
+        dtype = jnp.float32
     gl_q = jnp.asarray(gl_q, jnp.int32)
     gl_w = jnp.asarray(gl_w, jnp.int32)
-    q = jnp.asarray(q, jnp.float32)
-    w = jnp.asarray(w, jnp.float32)
+    q = jnp.asarray(q, dtype)
+    w = jnp.asarray(w, dtype)
     if use_pallas:
         return block_prox_pallas(gl_q, q, gl_w, w, block_q=block_q,
-                                 block_w=block_w,
-                                 interpret=jax.default_backend() != "tpu")
+                                 block_w=block_w, interpret=not on_tpu,
+                                 dtype=dtype)
     return block_prox_ref(gl_q, q, gl_w, w)

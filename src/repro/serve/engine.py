@@ -89,10 +89,13 @@ class ServingEngine:
                 self.pos[slot] = i
                 # prompt tokens are consumed by the shared step below; we
                 # prefill sequentially here for simplicity/portability.
-                tok = jnp.asarray(self._cur_token)
+                # NB: jnp.asarray can alias a numpy buffer zero-copy on CPU,
+                # and this loop mutates _cur_token/pos between async
+                # dispatches — hand the step defensive copies.
+                tok = jnp.asarray(self._cur_token.copy())
                 nxt, self.cache = self._step(
                     self.params, tok, self.cache,
-                    jnp.asarray(self.pos))
+                    jnp.asarray(self.pos.copy()))
             req.first_token_at = time.time()
             self._cur_token[slot, 0] = int(np.asarray(nxt)[slot, 0])
             self.pos[slot] = len(req.prompt)
@@ -103,8 +106,8 @@ class ServingEngine:
         if not self.active:
             return
         nxt, self.cache = self._step(self.params,
-                                     jnp.asarray(self._cur_token),
-                                     self.cache, jnp.asarray(self.pos))
+                                     jnp.asarray(self._cur_token.copy()),
+                                     self.cache, jnp.asarray(self.pos.copy()))
         nxt = np.asarray(nxt)
         for slot, req in list(self.active.items()):
             tok = int(nxt[slot, 0])

@@ -12,12 +12,33 @@ def small_cls_data():
 
 @pytest.fixture(scope="session")
 def rf_kernel_cache():
-    """One fitted ForestKernel per kernel_method, shared across tests."""
+    """One fitted ForestKernel per kernel_method, shared across tests.
+
+    The forest is fitted ONCE and shared: every ForestKernel reuses the same
+    trees and only rebuilds its (cheap) weight factors, so the session pays a
+    single training run instead of one per kernel method.
+    """
     from repro.core.api import ForestKernel
     X, y = gaussian_classes(900, d=10, n_classes=3, seed=3)
     out = {}
+    shared_forest = None
     for method in ["original", "kerf", "oob", "gap"]:
-        out[method] = ForestKernel(kernel_method=method, n_trees=15,
-                                   seed=0).fit(X, y)
+        fk = ForestKernel(kernel_method=method, n_trees=15, seed=0)
+        if shared_forest is None:
+            fk.fit(X, y)
+            shared_forest = fk.forest
+        else:
+            fk.forest = shared_forest
+            fk.build_kernel_cache()
+        out[method] = fk
     out["_data"] = (X, y)
     return out
+
+
+@pytest.fixture(scope="session")
+def fitted_forest():
+    """Small fitted RandomForest + its training data, shared session-wide."""
+    from repro.forest.ensemble import RandomForest
+    X, y = gaussian_classes(800, d=10, n_classes=3, seed=0)
+    rf = RandomForest(n_trees=8, seed=0).fit(X, y)
+    return rf, X

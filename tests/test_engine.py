@@ -1,0 +1,129 @@
+"""ProximityEngine backend equivalence: scipy vs jax vs pallas.
+
+The acceptance bar: predict / topk / kernel_block / matvec must agree with
+the scipy CSR reference path to atol 1e-8 on every backend, with no per-tree
+Python loop on any call path.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import ENGINE_BACKENDS, ProximityEngine
+
+BACKENDS = list(ENGINE_BACKENDS)
+
+
+def _engines(rf_kernel_cache, method):
+    """Three engines sharing one fitted context — no refits."""
+    fk = rf_kernel_cache[method]
+    out = {"scipy": fk.engine}
+    for be in ("jax", "pallas"):
+        out[be] = ProximityEngine(fk.ctx, fk.assignment, forest=fk.forest,
+                                  backend=be)
+    return fk, out
+
+
+@pytest.mark.parametrize("method", ["original", "gap"])
+def test_predict_identical_across_backends(rf_kernel_cache, method):
+    fk, engines = _engines(rf_kernel_cache, method)
+    y = fk.ctx.y
+    C = fk.forest.n_classes_
+    ref = engines["scipy"].predict(y, n_classes=C)
+    for be in ("jax", "pallas"):
+        got = engines[be].predict(y, n_classes=C)
+        np.testing.assert_allclose(got, ref, atol=1e-8)
+
+
+@pytest.mark.parametrize("method", ["original", "gap"])
+def test_oos_predict_identical_across_backends(rf_kernel_cache, method):
+    fk, engines = _engines(rf_kernel_cache, method)
+    X, y = rf_kernel_cache["_data"]
+    Xq = X[:25] + 1e-3
+    ref = engines["scipy"].predict(y, n_classes=fk.forest.n_classes_, X=Xq)
+    for be in ("jax", "pallas"):
+        got = engines[be].predict(y, n_classes=fk.forest.n_classes_, X=Xq)
+        np.testing.assert_allclose(got, ref, atol=1e-8)
+
+
+def test_topk_identical_across_backends(rf_kernel_cache):
+    fk, engines = _engines(rf_kernel_cache, "original")
+    _, val_ref = engines["scipy"].topk(k=5)
+    P = np.asarray(fk.kernel(set_diagonal=False).todense())
+    for be in BACKENDS:
+        idx, val = engines[be].topk(k=5)
+        np.testing.assert_allclose(val, val_ref, atol=1e-8)
+        # reported indices must realize the reported proximities
+        np.testing.assert_allclose(
+            np.take_along_axis(P, idx, axis=1), val, atol=1e-8)
+
+
+def test_kernel_block_identical_across_backends(rf_kernel_cache):
+    fk, engines = _engines(rf_kernel_cache, "gap")
+    rows, cols = np.arange(40), np.arange(10, 90)
+    ref = engines["scipy"].kernel_block(rows, cols)
+    for be in ("jax", "pallas"):
+        np.testing.assert_allclose(engines[be].kernel_block(rows, cols),
+                                   ref, atol=1e-8)
+
+
+def test_matvec_matmat_identical_across_backends(rf_kernel_cache):
+    fk, engines = _engines(rf_kernel_cache, "gap")
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=fk.ctx.n_train)
+    V = rng.normal(size=(fk.ctx.n_train, 3))
+    ref_v = engines["scipy"].matvec(v)
+    ref_V = engines["scipy"].matmat(V)
+    for be in ("jax", "pallas"):
+        np.testing.assert_allclose(engines[be].matvec(v), ref_v, atol=1e-8)
+        np.testing.assert_allclose(engines[be].matmat(V), ref_V, atol=1e-8)
+    op = engines["jax"].operator()
+    np.testing.assert_allclose(op @ v, ref_v, atol=1e-8)
+
+
+def test_oos_query_state_cached(rf_kernel_cache):
+    fk = rf_kernel_cache["original"]
+    X, _ = rf_kernel_cache["_data"]
+    Xq = X[:15] + 5e-4
+    s1 = fk.engine.query_state(Xq)
+    s2 = fk.engine.query_state(Xq.copy())      # same content, new buffer
+    assert s1 is s2, "OOS query state must be served from cache"
+    assert fk.query_map(Xq) is s1.Q
+
+
+def test_oos_cache_eviction(rf_kernel_cache):
+    fk = rf_kernel_cache["original"]
+    X, _ = rf_kernel_cache["_data"]
+    eng = ProximityEngine(fk.ctx, fk.assignment, forest=fk.forest,
+                          oos_cache_size=2)
+    batches = [X[:10] + i * 1e-3 for i in range(1, 5)]
+    states = [eng.query_state(b) for b in batches]
+    assert eng.query_state(batches[-1]) is states[-1]
+    assert len(eng._oos_cache) == 2
+    # evicted batch is rebuilt, not crashed
+    assert eng.query_state(batches[0]) is not states[0]
+
+
+def test_engine_rejects_unknown_backend(rf_kernel_cache):
+    fk = rf_kernel_cache["original"]
+    with pytest.raises(ValueError, match="unknown engine backend"):
+        ProximityEngine(fk.ctx, fk.assignment, backend="torch")
+
+
+def test_full_kernel_diagonal_without_lil(rf_kernel_cache):
+    """Diagonal override keeps CSR structure and exact values (satellite)."""
+    import scipy.sparse as sp
+    fk = rf_kernel_cache["oob"]
+    P = fk.kernel(set_diagonal=True)
+    assert sp.isspmatrix_csr(P)
+    np.testing.assert_allclose(P.diagonal(), 1.0)
+    # off-diagonal entries untouched
+    P0 = fk.kernel(set_diagonal=False)
+    D = P - sp.diags(P.diagonal())
+    D0 = P0 - sp.diags(P0.diagonal())
+    assert abs(D - D0).max() < 1e-12
+
+
+def test_memory_bytes_accounts_dense_factors(rf_kernel_cache):
+    fk = rf_kernel_cache["gap"]
+    mb = fk.engine.memory_bytes()
+    assert mb["dense_factors"] > 0 and mb["Q"] > 0 and mb["W"] > 0
+    assert mb["total"] == sum(v for k, v in mb.items() if k != "total")

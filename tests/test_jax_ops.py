@@ -6,7 +6,7 @@ import pytest
 
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st   # hypothesis, or deterministic fallback
 
 from repro.core.factorization import naive_swlc
 from repro.core.jax_ops import swlc_block, swlc_matmat, swlc_matvec, swlc_predict

@@ -4,7 +4,7 @@ import pytest
 
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st   # hypothesis, or deterministic fallback
 
 from repro.data.synthetic import gaussian_classes
 from repro.forest.ensemble import RandomForest
@@ -16,14 +16,8 @@ from repro.kernels.leaf_route import ops as route_ops
 from repro.kernels.leaf_route.ref import route_ref
 
 
-# ---------------------------------------------------------------- leaf_route
-@pytest.fixture(scope="module")
-def fitted_forest():
-    X, y = gaussian_classes(800, d=10, n_classes=3, seed=0)
-    rf = RandomForest(n_trees=8, seed=0).fit(X, y)
-    return rf, X
-
-
+# ------------------------------------------------- leaf_route
+# (`fitted_forest` is the session-scoped fixture from conftest.py)
 def test_route_pallas_matches_numpy(fitted_forest):
     rf, X = fitted_forest
     ta = rf.tree_arrays()
@@ -97,12 +91,9 @@ def test_block_prox_property(nq, nw, T, seed):
     np.testing.assert_allclose(got, want, atol=1e-5)
 
 
-def test_block_prox_matches_scipy_factorization(fitted_forest):
+def test_block_prox_matches_scipy_factorization(rf_kernel_cache):
     """End-to-end: Pallas block == CSR factorization block."""
-    from repro.core.api import ForestKernel
-    rf, X = fitted_forest
-    y = (X[:, 0] > 0).astype(int)
-    fk = ForestKernel(kernel_method="kerf", n_trees=10, seed=0).fit(X[:400], y[:400])
+    fk = rf_kernel_cache["kerf"]
     gl = fk.ctx.global_leaves()
     qw = fk.assignment.query_weights(fk.ctx.leaves)
     sub = np.arange(120)

@@ -1,0 +1,78 @@
+"""Proximity applications end-to-end: the Breiman–Cutler workload suite on
+the factored kernel — imputation, outliers, prototypes, label propagation,
+and embeddings, all without ever materializing dense P.
+
+  PYTHONPATH=src python examples/proximity_applications.py [--n 4000]
+      [--trees 30] [--backend scipy]
+"""
+import argparse
+
+import numpy as np
+
+from repro.applications.prototypes import NearestPrototypeClassifier
+from repro.core.api import ForestKernel
+from repro.data.synthetic import gaussian_classes, train_test_split
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4000)
+    ap.add_argument("--d", type=int, default=12)
+    ap.add_argument("--trees", type=int, default=30)
+    ap.add_argument("--backend", default="scipy",
+                    choices=["scipy", "jax", "pallas"])
+    args = ap.parse_args()
+
+    X, y = gaussian_classes(args.n, d=args.d, n_classes=4, sep=3.0, seed=0)
+    Xtr, ytr, Xte, yte = train_test_split(X, y, test_frac=0.1, seed=0)
+    fk = ForestKernel(kernel_method="gap", n_trees=args.trees, seed=0,
+                      engine_backend=args.backend)
+    fk.fit(Xtr, ytr)
+    print(f"fitted: {len(Xtr)} samples, {args.trees} trees, "
+          f"backend={args.backend}")
+
+    # 1. within-class outlier scores (n_c / Σ P², median/MAD normalized)
+    scores = fk.outlier_scores()
+    top = np.argsort(-scores)[:5]
+    print(f"outliers: top-5 scores {np.round(scores[top], 2)} at rows {top}")
+
+    # 2. tree-space prototypes + nearest-prototype classification
+    protos, coverage = fk.prototypes(n_prototypes=3, k=50)
+    print("prototypes per class:",
+          {c: list(map(int, p)) for c, p in protos.items()})
+    clf = NearestPrototypeClassifier(n_prototypes=3, k=50).fit(fk.engine, ytr)
+    acc = (clf.predict(Xte) == yte).mean()
+    print(f"nearest-prototype test accuracy: {acc:.3f} "
+          f"(coverage {dict((c, round(v, 2)) for c, v in coverage.items())})")
+
+    # 3. semi-supervised label propagation from 5% labels
+    rng = np.random.default_rng(0)
+    labeled = rng.random(len(ytr)) < 0.05
+    lab, _ = fk.propagate_labels(labeled)
+    acc = (lab[~labeled] == ytr[~labeled]).mean()
+    print(f"label propagation: {labeled.sum()} labels -> "
+          f"{acc:.3f} accuracy on the {np.sum(~labeled)} unlabeled rows")
+
+    # 4. proximity-MDS embedding with Nyström OOS transform
+    emb = fk.embed(n_components=2)
+    Zte = emb.transform(Xte)
+    print(f"embedding: train {emb.embedding_.shape}, OOS {Zte.shape}, "
+          f"top eigenvalues {np.round(emb.eigvals_, 2)}")
+
+    # 5. iterative proximity-weighted imputation of 10% MCAR entries
+    Xm = Xtr.copy()
+    mask = rng.random(Xm.shape) < 0.1
+    Xm[mask] = np.nan
+    imp = ForestKernel(kernel_method="gap", n_trees=args.trees, seed=0,
+                       engine_backend=args.backend).impute(Xm, ytr, n_iter=3)
+    err = np.abs(imp.X_imputed_[mask] - Xtr[mask]).mean()
+    med = np.nanmedian(Xm, axis=0)
+    err_med = np.abs(np.broadcast_to(med, Xm.shape)[mask] - Xtr[mask]).mean()
+    print(f"imputation: mean abs error {err:.3f} vs median-fill {err_med:.3f}"
+          f" (deltas per iter: {[round(h, 4) for h in imp.history_]})")
+    assert err < err_med, "imputation must beat the rough fill"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

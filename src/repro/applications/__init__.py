@@ -1,0 +1,25 @@
+"""Proximity applications — Breiman–Cutler's workload suite on the factored
+kernel.
+
+Every module here consumes only :class:`~repro.core.engine.ProximityEngine`
+primitives (matvec / matmat / topk / kernel_block / row_sums /
+squared_row_sums), so all five workloads run through the sparse factored form
+``P = Q Wᵀ`` on every engine backend — the dense proximity matrix is never
+materialized for more rows than a streaming chunk.
+
+- :mod:`.imputation` — iterative proximity-weighted missing-value imputation
+- :mod:`.outliers`   — within-class outlier scores ``n / Σ_j P(i,j)²``
+- :mod:`.prototypes` — greedy tree-space prototypes + nearest-prototype
+  classification
+- :mod:`.propagate`  — semi-supervised label propagation
+- :mod:`.embed`      — proximity-MDS embeddings with Nyström OOS transform
+"""
+from .embed import ProximityEmbedding
+from .imputation import ProximityImputer
+from .outliers import outlier_scores
+from .propagate import propagate_labels
+from .prototypes import NearestPrototypeClassifier, select_prototypes
+
+__all__ = ["ProximityImputer", "outlier_scores", "select_prototypes",
+           "NearestPrototypeClassifier", "propagate_labels",
+           "ProximityEmbedding"]

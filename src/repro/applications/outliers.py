@@ -1,0 +1,61 @@
+"""Within-class proximity outlier scores (Breiman & Cutler).
+
+The raw outlyingness of sample i with class c = y_i is
+
+    raw(i) = n_c / Σ_{j: y_j = c} P(i, j)²
+
+— a point whose proximities to its own class are uniformly small (it shares
+few leaves with its class) gets a large score.  Scores are then normalized
+per class by median/MAD so they are comparable across classes.
+
+The class-restricted squared row sums come from
+``ProximityEngine.squared_row_sums`` — streamed sparse/block products through
+the factors, never a dense P.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["outlier_scores"]
+
+
+def outlier_scores(engine, y: np.ndarray, normalize: bool = True,
+                   n_classes: Optional[int] = None,
+                   block: int = 4096) -> np.ndarray:
+    """Per-sample within-class outlier scores on the training set.
+
+    Parameters
+    ----------
+    engine : ProximityEngine
+    y : (N,) integer class labels of the training samples.
+    normalize : subtract the class median and divide by the class MAD
+        (raw scores otherwise).
+    block : row-chunk size for the streamed squared-proximity sums.
+    """
+    y = np.asarray(y, dtype=np.int64)
+    n = len(y)
+    if n_classes is None:
+        n_classes = int(y.max()) + 1
+    sq = engine.squared_row_sums(class_ids=y, n_classes=n_classes,
+                                 block=block)            # (N, C)
+    own = sq[np.arange(n), y]                            # Σ_{j∈class(i)} P²
+    counts = np.bincount(y, minlength=n_classes).astype(np.float64)
+    # a zero within-class sum (possible for zero-diagonal kernels like GAP)
+    # is maximal outlyingness — cap the score at n² to keep it finite
+    cap = float(n) ** 2
+    with np.errstate(divide="ignore", over="ignore"):
+        raw = counts[y] / np.maximum(own, np.finfo(np.float64).tiny)
+    raw = np.minimum(raw, cap)
+    if not normalize:
+        return raw
+    out = np.empty(n)
+    for c in range(n_classes):
+        m = y == c
+        if not m.any():
+            continue
+        med = np.median(raw[m])
+        mad = np.median(np.abs(raw[m] - med))
+        out[m] = (raw[m] - med) / max(mad, np.finfo(np.float64).tiny)
+    return out

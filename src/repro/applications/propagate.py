@@ -1,0 +1,50 @@
+"""Semi-supervised label propagation on the proximity graph.
+
+Zhu–Ghahramani-style propagation with clamped labels: with the row-stochastic
+operator S = D⁻¹ P (D = kernel row sums), iterate
+
+    F ← α S F + (1 − α) Y₀,   then   F[labeled] ← Y₀[labeled]
+
+until the class scores stop moving.  Each step is one row-normalized
+``ProximityEngine.matmat`` — O(nnz) per iteration through the factors, so
+the proximity graph itself is never materialized.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = ["propagate_labels"]
+
+
+def propagate_labels(engine, y: np.ndarray, labeled: np.ndarray,
+                     n_classes: Optional[int] = None, alpha: float = 0.8,
+                     n_iter: int = 50,
+                     tol: float = 1e-5) -> Tuple[np.ndarray, np.ndarray]:
+    """Propagate the labels of ``labeled`` rows to the rest of the training
+    set.  ``y`` entries outside the labeled mask are ignored (may be -1).
+
+    Returns ``(labels, scores)``: hard labels (N,) and the propagated class
+    scores (N, C) normalized to row-sum 1 where possible.
+    """
+    y = np.asarray(y, dtype=np.int64)
+    labeled = np.asarray(labeled, dtype=bool)
+    if not labeled.any():
+        raise ValueError("need at least one labeled sample")
+    if n_classes is None:
+        n_classes = int(y[labeled].max()) + 1
+    n = len(y)
+    Y0 = np.zeros((n, n_classes))
+    Y0[labeled, y[labeled]] = 1.0
+    F = Y0.copy()
+    for _ in range(n_iter):
+        Fn = alpha * engine.matmat(F, normalized=True) + (1 - alpha) * Y0
+        Fn[labeled] = Y0[labeled]
+        delta = float(np.abs(Fn - F).max())
+        F = Fn
+        if delta < tol:
+            break
+    rs = F.sum(axis=1, keepdims=True)
+    scores = F / np.maximum(rs, np.finfo(np.float64).tiny)
+    return F.argmax(axis=1), scores

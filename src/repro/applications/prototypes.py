@@ -1,0 +1,95 @@
+"""Tree-space prototypes (Tan, Hooker & Wells) on the factored kernel.
+
+Greedy class-coverage selection: a class prototype is the sample whose
+proximity neighborhood (its top-k nearest neighbors in tree space) contains
+the most same-class samples not yet covered by an earlier prototype —
+greedy set cover over proximity neighborhoods.  Neighborhoods come from
+``ProximityEngine.topk`` (streamed block top-k, never a dense P), and the
+nearest-prototype classifier scores queries against the selected prototype
+columns only, via ``kernel_block``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["select_prototypes", "NearestPrototypeClassifier"]
+
+
+def select_prototypes(engine, y: np.ndarray, n_prototypes: int = 3,
+                      k: int = 50) -> Tuple[Dict[int, np.ndarray],
+                                            Dict[int, float]]:
+    """Greedy proximity-coverage prototypes per class.
+
+    Returns ``(prototypes, coverage)``: for each class, the selected training
+    row indices (≤ n_prototypes, in selection order) and the fraction of
+    class members covered by the selected neighborhoods.
+    """
+    y = np.asarray(y, dtype=np.int64)
+    n = len(y)
+    idx, val = engine.topk(k=min(k, n))          # (N, k) neighbor ids/probs
+    protos: Dict[int, np.ndarray] = {}
+    coverage: Dict[int, float] = {}
+    for c in np.unique(y):
+        members = np.flatnonzero(y == c)
+        neigh = idx[members]                                  # (nc, k)
+        valid = (val[members] > 0) & (y[neigh] == c)          # same-class hits
+        covered = np.zeros(n, dtype=bool)
+        chosen = []
+        for _ in range(min(n_prototypes, len(members))):
+            gain = (valid & ~covered[neigh]).sum(axis=1)
+            best = int(np.argmax(gain))          # first max -> deterministic
+            if gain[best] == 0 and chosen:
+                break
+            chosen.append(int(members[best]))
+            covered[neigh[best][valid[best]]] = True
+            covered[members[best]] = True
+        protos[int(c)] = np.asarray(chosen, dtype=np.int64)
+        coverage[int(c)] = float(covered[members].mean())
+    return protos, coverage
+
+
+@dataclasses.dataclass
+class NearestPrototypeClassifier:
+    """Classify by maximum proximity to any selected prototype."""
+
+    n_prototypes: int = 3
+    k: int = 50
+
+    prototype_indices_: Optional[np.ndarray] = None   # (P,) training rows
+    prototype_labels_: Optional[np.ndarray] = None    # (P,) classes
+    coverage_: Optional[Dict[int, float]] = None
+    engine_: object = None
+
+    def fit(self, engine, y: np.ndarray) -> "NearestPrototypeClassifier":
+        protos, cov = select_prototypes(engine, y,
+                                        n_prototypes=self.n_prototypes,
+                                        k=self.k)
+        classes = sorted(protos)
+        self.prototype_indices_ = np.concatenate([protos[c] for c in classes])
+        self.prototype_labels_ = np.concatenate(
+            [np.full(len(protos[c]), c, dtype=np.int64) for c in classes])
+        self.coverage_ = cov
+        self.engine_ = engine
+        return self
+
+    def decision_function(self, X: Optional[np.ndarray] = None,
+                          block: int = 4096) -> np.ndarray:
+        """(Nq, P) proximities of each query to each prototype — dense only
+        over the prototype columns, streamed over query rows."""
+        eng = self.engine_
+        qs = eng.query_state(X)
+        n = qs.Q.shape[0]
+        out = np.empty((n, len(self.prototype_indices_)))
+        for i0 in range(0, n, block):
+            rows = np.arange(i0, min(i0 + block, n))
+            out[rows] = eng.kernel_block(rows, cols=self.prototype_indices_,
+                                         X_rows=X)
+        return out
+
+    def predict(self, X: Optional[np.ndarray] = None,
+                block: int = 4096) -> np.ndarray:
+        B = self.decision_function(X, block=block)
+        return self.prototype_labels_[B.argmax(axis=1)]

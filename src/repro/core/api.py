@@ -127,6 +127,63 @@ class ForestKernel:
     def leaf_pca(self, n_components: int = 50) -> LeafPCA:
         return LeafPCA(n_components=n_components).fit(self.Q_)
 
+    def row_sums(self, X: Optional[np.ndarray] = None) -> np.ndarray:
+        """Kernel row sums Σ_j P(i,j) (proximity-graph degrees)."""
+        return self.engine.row_sums(X=X)
+
+    # ---------------- proximity applications ----------------
+    def _config_kwargs(self) -> dict:
+        """The constructor config (for subsystems that refit internally)."""
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)
+                if f.name not in ("forest", "ctx", "assignment", "engine",
+                                  "Q_", "W_")}
+
+    def impute(self, X: np.ndarray, y: np.ndarray, n_iter: int = 5,
+               categorical=(), tol: float = 1e-3):
+        """Iterative proximity-weighted imputation of NaN entries in X.
+
+        Uses this kernel's config for the per-iteration refits (callable on
+        an unfitted ForestKernel).  Returns the fitted ProximityImputer —
+        the filled matrix is ``.X_imputed_``, convergence in ``.history_``.
+        """
+        from ..applications.imputation import ProximityImputer
+        imp = ProximityImputer(n_iter=n_iter, categorical=categorical,
+                               tol=tol, kernel_kwargs=self._config_kwargs())
+        imp.fit_transform(X, y)
+        return imp
+
+    def outlier_scores(self, normalize: bool = True,
+                       block: int = 4096) -> np.ndarray:
+        """Within-class outlier scores n_c / Σ_{j∈c} P(i,j)², median/MAD
+        normalized per class."""
+        from ..applications.outliers import outlier_scores
+        return outlier_scores(self.engine, self.ctx.y, normalize=normalize,
+                              block=block)
+
+    def prototypes(self, n_prototypes: int = 3, k: int = 50):
+        """Greedy tree-space prototypes per class: (prototypes, coverage)."""
+        from ..applications.prototypes import select_prototypes
+        return select_prototypes(self.engine, self.ctx.y,
+                                 n_prototypes=n_prototypes, k=k)
+
+    def propagate_labels(self, labeled: np.ndarray,
+                         y: Optional[np.ndarray] = None, alpha: float = 0.8,
+                         n_iter: int = 50, tol: float = 1e-5):
+        """Semi-supervised label propagation: (labels, class scores)."""
+        from ..applications.propagate import propagate_labels
+        yy = self.ctx.y if y is None else y
+        return propagate_labels(self.engine, yy, labeled, alpha=alpha,
+                                n_iter=n_iter, tol=tol)
+
+    def embed(self, n_components: int = 2, method: str = "auto",
+              seed: int = 0):
+        """Proximity-MDS embedding; returns the fitted ProximityEmbedding
+        (training coords in ``.embedding_``, OOS via ``.transform(X)``)."""
+        from ..applications.embed import ProximityEmbedding
+        return ProximityEmbedding(n_components=n_components, method=method,
+                                  seed=seed).fit(self.engine)
+
     # ---------------- accounting ----------------
     def memory_bytes(self) -> dict:
         """Bytes of cached metadata + factors (the paper's reported memory)."""

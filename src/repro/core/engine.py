@@ -94,6 +94,8 @@ class ProximityEngine:
         self._oos_cache: "OrderedDict[str, QueryState]" = OrderedDict()
         self._oos_cache_size = oos_cache_size
         self._use_x64 = self.dtype == np.float64
+        self._train_row_sums: Optional[np.ndarray] = None
+        self.last_matmat_path: Optional[str] = None   # 'sharded' | 'segment'
 
     # ---------------- query-state management ----------------
     @staticmethod
@@ -128,23 +130,76 @@ class ProximityEngine:
         return state
 
     # ---------------- core products ----------------
-    def matvec(self, v: np.ndarray, X: Optional[np.ndarray] = None) -> np.ndarray:
-        return self.matmat(np.asarray(v)[:, None], X=X)[:, 0]
+    def matvec(self, v: np.ndarray, X: Optional[np.ndarray] = None,
+               col_mask: Optional[np.ndarray] = None,
+               normalized: bool = False) -> np.ndarray:
+        return self.matmat(np.asarray(v)[:, None], X=X, col_mask=col_mask,
+                           normalized=normalized)[:, 0]
 
-    def matmat(self, V: np.ndarray, X: Optional[np.ndarray] = None) -> np.ndarray:
-        """(P V) where P's rows are the train (X=None) or OOS query batch."""
+    def matmat(self, V: np.ndarray, X: Optional[np.ndarray] = None,
+               col_mask: Optional[np.ndarray] = None,
+               normalized: bool = False) -> np.ndarray:
+        """(P V) where P's rows are the train (X=None) or OOS query batch.
+
+        ``col_mask`` (N_ref,) restricts the reference side:
+        Σ_j m_j P(i,j) V[j] — since P V = Q (Wᵀ V), the mask folds into V as
+        Q (Wᵀ (m ⊙ V)) on every backend (the class-masked matmat primitive).
+        ``normalized`` divides each output row by the *unmasked* kernel row
+        sum Σ_j P(i,j), i.e. applies D⁻¹ P (the label-propagation operator).
+        """
+        V = np.asarray(V, dtype=self.dtype)
+        if col_mask is not None:
+            V = V * np.asarray(col_mask, dtype=self.dtype)[:, None]
         qs = self.query_state(X)
         if self.backend == "scipy":
-            return np.asarray(qs.Q @ (self.W.T @ V))
-        return self._segment_matmat(qs, np.asarray(V, dtype=self.dtype))
+            out = np.asarray(qs.Q @ (self.W.T @ V))
+        else:
+            out = self._segment_matmat(qs, V)
+        if normalized:
+            d = self.row_sums(X=X)
+            out = out / np.maximum(d, np.finfo(self.dtype).tiny)[:, None]
+        return out
+
+    def row_sums(self, X: Optional[np.ndarray] = None) -> np.ndarray:
+        """Kernel row sums Σ_j P(i,j) = P·1 through the factors (the degree
+        vector of the proximity graph); cached for the training state."""
+        if X is None and self._train_row_sums is not None:
+            return self._train_row_sums
+        ones = np.ones(self.W.shape[0], dtype=self.dtype)
+        out = self.matvec(ones, X=X)
+        if X is None:
+            self._train_row_sums = out
+        return out
 
     def _segment_matmat(self, qs: QueryState, V: np.ndarray) -> np.ndarray:
         import jax.numpy as jnp
-        from .jax_ops import swlc_predict
+        from . import jax_ops
+        n_ref, T = self.gl.shape
         with _x64_scope(self._use_x64):
-            out = swlc_predict(jnp.asarray(qs.gl), jnp.asarray(qs.q),
-                               jnp.asarray(self.gl), jnp.asarray(self.w),
-                               jnp.asarray(V), self.total_leaves)
+            if qs is self._train_state:
+                mesh = jax_ops.default_mesh()
+                if mesh is not None and n_ref % mesh.devices.shape[0] == 0:
+                    n_dev = mesh.devices.shape[0]
+                    gl_d, q_d = jnp.asarray(self.gl), jnp.asarray(self.q)
+                    w_d = jnp.asarray(self.w)
+                    # wide V: split into column blocks so the per-device
+                    # (N/devices, T, c) intermediate stays bounded
+                    c = jax_ops.auto_c_chunk(n_ref // n_dev, T, V.shape[1])
+                    c = V.shape[1] if c is None else c
+                    out = np.concatenate([
+                        np.asarray(jax_ops.sharded_swlc_matmat(
+                            mesh, gl_d, q_d, w_d,
+                            jnp.asarray(V[:, j0:j0 + c]), self.total_leaves))
+                        for j0 in range(0, V.shape[1], c)], axis=1)
+                    self.last_matmat_path = "sharded"
+                    return out
+            t_chunk = jax_ops.auto_t_chunk(n_ref, T, V.shape[1])
+            out = jax_ops.swlc_predict(jnp.asarray(qs.gl), jnp.asarray(qs.q),
+                                       jnp.asarray(self.gl),
+                                       jnp.asarray(self.w),
+                                       jnp.asarray(V), self.total_leaves,
+                                       t_chunk=t_chunk)
+            self.last_matmat_path = "segment"
             return np.asarray(out)
 
     def operator(self) -> LinearOperator:
@@ -194,6 +249,56 @@ class ProximityEngine:
         from ..kernels.block_prox.ops import block_prox
         with _x64_scope(self._use_x64):
             return np.asarray(block_prox(gl_q, q, gl_w, w, dtype=self.dtype))
+
+    def squared_row_sums(self, class_ids: Optional[np.ndarray] = None,
+                         n_classes: Optional[int] = None,
+                         X: Optional[np.ndarray] = None,
+                         block: int = 4096) -> np.ndarray:
+        """Σ_j P(i,j)² per query row — the outlier-score primitive.
+
+        With ``class_ids`` (N_ref,) the sum is bucketed by reference class:
+        out[i, c] = Σ_{j: class_ids[j]=c} P(i,j)², shape (Nq, n_classes).
+        Streamed in row blocks (sparse on scipy, dense device blocks on
+        jax/pallas) — never a full dense P.
+        """
+        qs = self.query_state(X)
+        n = qs.Q.shape[0]
+        if class_ids is not None:
+            class_ids = np.asarray(class_ids, dtype=np.int64)
+            if n_classes is None:
+                n_classes = int(class_ids.max()) + 1
+            out = np.zeros((n, n_classes), dtype=self.dtype)
+        else:
+            out = np.zeros(n, dtype=self.dtype)
+
+        if self.backend == "scipy":
+            WT = self.W.T.tocsc()
+            for i0 in range(0, n, block):
+                B = (qs.Q[i0:i0 + block] @ WT).tocsr()
+                nb = B.shape[0]
+                rows = np.repeat(np.arange(nb), np.diff(B.indptr))
+                d2 = B.data ** 2
+                if class_ids is None:
+                    out[i0:i0 + nb] = np.bincount(rows, weights=d2,
+                                                  minlength=nb)
+                else:
+                    comb = rows * n_classes + class_ids[B.indices]
+                    out[i0:i0 + nb] = np.bincount(
+                        comb, weights=d2,
+                        minlength=nb * n_classes).reshape(nb, n_classes)
+            return out
+
+        onehot = None
+        if class_ids is not None:
+            onehot = np.zeros((self.W.shape[0], n_classes), dtype=self.dtype)
+            onehot[np.arange(self.W.shape[0]), class_ids] = 1.0
+        step = min(block, self._row_chunk(self.W.shape[0]))
+        for i0 in range(0, n, step):
+            rows = np.arange(i0, min(i0 + step, n))
+            B = self.kernel_block(rows, X_rows=X)
+            B2 = B * B
+            out[rows] = B2.sum(axis=1) if onehot is None else B2 @ onehot
+        return out
 
     # ---------------- downstream ----------------
     def predict(self, y: np.ndarray, n_classes: Optional[int] = None,

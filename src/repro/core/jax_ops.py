@@ -23,7 +23,48 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["swlc_matvec", "swlc_matmat", "swlc_block", "swlc_predict",
-           "swlc_topk", "sharded_swlc_matmat"]
+           "swlc_topk", "sharded_swlc_matmat", "default_mesh", "auto_t_chunk"]
+
+
+def _shard_map():
+    """`jax.shard_map` moved out of `jax.experimental` only in newer jax;
+    resolve whichever this jax provides."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map
+    from jax.experimental.shard_map import shard_map
+    return shard_map
+
+
+def default_mesh(data_axis: str = "data",
+                 model_axis: str = "model") -> Optional[Mesh]:
+    """(n_devices, 1) data-parallel mesh over all local devices, or None on a
+    single device — the gate for the engine's sharded matmat path."""
+    import numpy as np
+    devs = jax.devices()
+    if len(devs) < 2:
+        return None
+    return Mesh(np.asarray(devs).reshape(len(devs), 1),
+                (data_axis, model_axis))
+
+
+def auto_t_chunk(n: int, T: int, C: int,
+                 budget_elems: int = 1 << 24) -> Optional[int]:
+    """Tree-chunk size keeping the (n, t_chunk, C) collision intermediate of
+    the segment-sum product under ~budget elements (None = no chunking)."""
+    if n * T * C <= budget_elems:
+        return None
+    return max(1, min(T, budget_elems // max(n * C, 1)))
+
+
+def auto_c_chunk(n_local: int, T: int, C: int,
+                 budget_elems: int = 1 << 24) -> Optional[int]:
+    """Column-chunk size for the *sharded* matmat, whose per-device
+    (n_local, T, c_chunk) intermediate cannot tree-chunk (the bucket psum
+    spans all trees); wide V is split into column blocks instead
+    (None = no chunking)."""
+    if n_local * T * C <= budget_elems:
+        return None
+    return max(1, min(C, budget_elems // max(n_local * T, 1)))
 
 
 @functools.partial(jax.jit, static_argnames=("total_leaves",))
@@ -35,15 +76,69 @@ def swlc_matvec(gl: jax.Array, q: jax.Array, w: jax.Array, v: jax.Array,
     return (q * s[gl]).sum(axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("total_leaves",))
+@functools.partial(jax.jit, static_argnames=("total_leaves", "t_chunk"))
+def _swlc_product(gl_q: jax.Array, q: jax.Array, gl_w: jax.Array,
+                  w: jax.Array, V: jax.Array, total_leaves: int,
+                  t_chunk: Optional[int]) -> jax.Array:
+    """(P V) for P = SWLC(q, w) with query rows (gl_q, q) and reference rows
+    (gl_w, w); V: (N_w, C).
+
+    ``t_chunk`` bounds the dense collision intermediate: instead of one
+    (N, T, C) tensor, both the bucket and gather stages accumulate over tree
+    chunks of size t_chunk, so peak memory is (N, t_chunk, C) — the fix for
+    large C (many classes / wide V).
+    """
+    nq, T = gl_q.shape
+    nw = gl_w.shape[0]
+    C = V.shape[1]
+    out_dtype = jnp.result_type(q.dtype, V.dtype)
+    if t_chunk is None or t_chunk >= T:
+        contrib = w[:, :, None] * V[:, None, :]              # (N_w, T, C)
+        s = jax.ops.segment_sum(contrib.reshape(nw * T, -1), gl_w.ravel(),
+                                num_segments=total_leaves)   # (L, C)
+        return (q[:, :, None] * s[gl_q]).sum(axis=1)
+
+    pad = (-T) % t_chunk
+    if pad:
+        # sentinel tree columns: leaf id = total_leaves (a dedicated padding
+        # bucket), weights 0 — contribute nothing on either side
+        gl_q = jnp.pad(gl_q, ((0, 0), (0, pad)), constant_values=total_leaves)
+        gl_w = jnp.pad(gl_w, ((0, 0), (0, pad)), constant_values=total_leaves)
+        q = jnp.pad(q, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+    n_chunks = (T + pad) // t_chunk
+
+    def bucket(c, s):
+        sl = jax.lax.dynamic_slice_in_dim
+        gw = sl(gl_w, c * t_chunk, t_chunk, axis=1)
+        ww = sl(w, c * t_chunk, t_chunk, axis=1)
+        contrib = ww[:, :, None] * V[:, None, :]         # (N_w, t_chunk, C)
+        return s + jax.ops.segment_sum(
+            contrib.reshape(nw * t_chunk, -1), gw.ravel(),
+            num_segments=total_leaves + 1)
+
+    s = jax.lax.fori_loop(0, n_chunks, bucket,
+                          jnp.zeros((total_leaves + 1, C), dtype=out_dtype))
+
+    def gather(c, out):
+        sl = jax.lax.dynamic_slice_in_dim
+        gq = sl(gl_q, c * t_chunk, t_chunk, axis=1)
+        qq = sl(q, c * t_chunk, t_chunk, axis=1)
+        return out + (qq[:, :, None] * s[gq]).sum(axis=1)
+
+    return jax.lax.fori_loop(0, n_chunks, gather,
+                             jnp.zeros((nq, C), dtype=out_dtype))
+
+
 def swlc_matmat(gl: jax.Array, q: jax.Array, w: jax.Array, V: jax.Array,
-                total_leaves: int) -> jax.Array:
-    """(P V) for V: (N, C)  — the proximity-weighted prediction primitive."""
-    n, T = gl.shape
-    contrib = w[:, :, None] * V[:, None, :]              # (N, T, C)
-    s = jax.ops.segment_sum(contrib.reshape(n * T, -1), gl.ravel(),
-                            num_segments=total_leaves)   # (L, C)
-    return (q[:, :, None] * s[gl]).sum(axis=1)
+                total_leaves: int,
+                t_chunk: Optional[int] = None) -> jax.Array:
+    """(P V) for V: (N, C)  — the proximity-weighted prediction primitive.
+
+    Pass ``t_chunk`` (see ``auto_t_chunk``) to cap the dense (N, t_chunk, C)
+    intermediate when C is large.
+    """
+    return _swlc_product(gl, q, gl, w, V, total_leaves, t_chunk)
 
 
 @functools.partial(jax.jit, static_argnames=("t_chunk",))
@@ -91,13 +186,10 @@ def swlc_topk(gl_q: jax.Array, q: jax.Array, gl_w: jax.Array, w: jax.Array,
     return jax.lax.top_k(B, k)
 
 
-def swlc_predict(gl_q, q, gl_w, w, Y, total_leaves: int) -> jax.Array:
+def swlc_predict(gl_q, q, gl_w, w, Y, total_leaves: int,
+                 t_chunk: Optional[int] = None) -> jax.Array:
     """OOS proximity prediction: rows = queries, refs = (gl_w, w, Y)."""
-    n_w, T = gl_w.shape
-    contrib = w[:, :, None] * Y[:, None, :]
-    s = jax.ops.segment_sum(contrib.reshape(n_w * T, -1), gl_w.ravel(),
-                            num_segments=total_leaves)
-    return (q[:, :, None] * s[gl_q]).sum(axis=1)
+    return _swlc_product(gl_q, q, gl_w, w, Y, total_leaves, t_chunk)
 
 
 def sharded_swlc_matmat(mesh: Mesh, gl: jax.Array, q: jax.Array, w: jax.Array,
@@ -126,7 +218,7 @@ def sharded_swlc_matmat(mesh: Mesh, gl: jax.Array, q: jax.Array, w: jax.Array,
 
     spec_nt = P(data_axis, model_axis)
     spec_nc = P(data_axis, None)
-    fn = jax.shard_map(local, mesh=mesh,
-                       in_specs=(spec_nt, spec_nt, spec_nt, spec_nc),
-                       out_specs=spec_nc)
+    fn = _shard_map()(local, mesh=mesh,
+                      in_specs=(spec_nt, spec_nt, spec_nt, spec_nc),
+                      out_specs=spec_nc)
     return fn(gl, q, w, V)

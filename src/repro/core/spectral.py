@@ -13,9 +13,9 @@ from typing import Optional
 
 import numpy as np
 import scipy.sparse as sp
-from scipy.sparse.linalg import LinearOperator, svds
+from scipy.sparse.linalg import LinearOperator, eigsh, svds
 
-__all__ = ["LeafPCA", "kernel_eigs"]
+__all__ = ["LeafPCA", "kernel_eigs", "operator_eigs"]
 
 
 @dataclasses.dataclass
@@ -73,3 +73,16 @@ def kernel_eigs(Q: sp.csr_matrix, k: int = 10, seed: int = 0):
     u, s, _ = svds(Q.asfptype(), k=k, v0=rng.normal(size=min(Q.shape)))
     order = np.argsort(-s)
     return (s ** 2)[order], u[:, order]
+
+
+def operator_eigs(op: LinearOperator, k: int = 10, seed: int = 0):
+    """Top-k eigenpairs of a symmetric LinearOperator via Lanczos.
+
+    The asymmetric-kernel fallback for spectral embeddings: the caller
+    symmetrizes P through its factored matvecs (½(P + Pᵀ)v) and this never
+    touches a dense matrix.  Returns (eigvals, eigvecs), descending.
+    """
+    rng = np.random.default_rng(seed)
+    vals, vecs = eigsh(op, k=k, v0=rng.normal(size=op.shape[0]))
+    order = np.argsort(-vals)
+    return vals[order], vecs[:, order]

@@ -36,6 +36,39 @@ def rf_kernel_cache():
 
 
 @pytest.fixture(scope="session")
+def app_kernel_cache():
+    """Small (≤200-sample) kernels on all three engine backends sharing one
+    forest, plus the explicit dense oracle P = Q Wᵀ — the fixture for the
+    engine-primitive and proximity-application tests.
+
+    'sym' is an additional symmetric-method (original) kernel on the same
+    forest for the spectral/embedding tests, with its own oracle 'P_sym'.
+    """
+    from repro.core.api import ForestKernel
+    X, y = gaussian_classes(180, d=8, n_classes=3, sep=3.0, seed=5)
+    out = {}
+    shared = None
+    for be in ["scipy", "jax", "pallas"]:
+        fk = ForestKernel(kernel_method="gap", n_trees=12, seed=0,
+                          engine_backend=be)
+        if shared is None:
+            fk.fit(X, y)
+            shared = fk.forest
+        else:
+            fk.forest = shared
+            fk.build_kernel_cache()
+        out[be] = fk
+    sym = ForestKernel(kernel_method="original", n_trees=12, seed=0)
+    sym.forest = shared
+    sym.build_kernel_cache()
+    out["sym"] = sym
+    out["P"] = np.asarray((out["scipy"].Q_ @ out["scipy"].W_.T).todense())
+    out["P_sym"] = np.asarray((sym.Q_ @ sym.W_.T).todense())
+    out["_data"] = (X, y)
+    return out
+
+
+@pytest.fixture(scope="session")
 def fitted_forest():
     """Small fitted RandomForest + its training data, shared session-wide."""
     from repro.forest.ensemble import RandomForest

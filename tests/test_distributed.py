@@ -74,10 +74,10 @@ def test_sharded_train_step_matches_single_device():
 def test_sharded_swlc_matmat():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
         from repro.core.jax_ops import sharded_swlc_matmat
         from repro.core.factorization import naive_swlc
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
         rng = np.random.default_rng(0)
         N, T, L = 64, 8, 40
         gl = rng.integers(0, 5, (N, T)) + np.arange(T)[None] * 5

@@ -127,3 +127,126 @@ def test_memory_bytes_accounts_dense_factors(rf_kernel_cache):
     mb = fk.engine.memory_bytes()
     assert mb["dense_factors"] > 0 and mb["Q"] > 0 and mb["W"] > 0
     assert mb["total"] == sum(v for k, v in mb.items() if k != "total")
+
+
+# ------------------- applications primitives (dense oracle, ≤200 samples) ---
+def test_row_sums_dense_oracle_all_backends(app_kernel_cache):
+    P = app_kernel_cache["P"]
+    X, _ = app_kernel_cache["_data"]
+    Xq = X[:20] + 1e-3
+    Pq = np.asarray((app_kernel_cache["scipy"].query_map(Xq) @
+                     app_kernel_cache["scipy"].W_.T).todense())
+    for be in BACKENDS:
+        eng = app_kernel_cache[be].engine
+        np.testing.assert_allclose(eng.row_sums(), P.sum(1), atol=1e-8)
+        np.testing.assert_allclose(eng.row_sums(X=Xq), Pq.sum(1), atol=1e-8)
+    # training row sums are cached
+    eng = app_kernel_cache["scipy"].engine
+    assert eng.row_sums() is eng.row_sums()
+
+
+def test_masked_matmat_dense_oracle_all_backends(app_kernel_cache):
+    P = app_kernel_cache["P"]
+    rng = np.random.default_rng(0)
+    V = rng.normal(size=(P.shape[1], 4))
+    mask = rng.random(P.shape[1]) < 0.5
+    ref = P @ (V * mask[:, None])
+    for be in BACKENDS:
+        got = app_kernel_cache[be].engine.matmat(V, col_mask=mask)
+        np.testing.assert_allclose(got, ref, atol=1e-8)
+
+
+def test_normalized_matmat_dense_oracle_all_backends(app_kernel_cache):
+    P = app_kernel_cache["P"]
+    rng = np.random.default_rng(1)
+    V = rng.normal(size=(P.shape[1], 3))
+    ref = (P / P.sum(1)[:, None]) @ V
+    for be in BACKENDS:
+        got = app_kernel_cache[be].engine.matmat(V, normalized=True)
+        np.testing.assert_allclose(got, ref, atol=1e-8)
+
+
+def test_squared_row_sums_dense_oracle_all_backends(app_kernel_cache):
+    P = app_kernel_cache["P"]
+    X, y = app_kernel_cache["_data"]
+    per_class = np.stack([(P[:, y == c] ** 2).sum(1) for c in range(3)], 1)
+    Xq = X[:17] + 1e-3
+    Pq = np.asarray((app_kernel_cache["scipy"].query_map(Xq) @
+                     app_kernel_cache["scipy"].W_.T).todense())
+    per_class_q = np.stack([(Pq[:, y == c] ** 2).sum(1) for c in range(3)], 1)
+    for be in BACKENDS:
+        eng = app_kernel_cache[be].engine
+        # odd block size exercises the streaming chunk boundaries
+        np.testing.assert_allclose(eng.squared_row_sums(block=53),
+                                   (P ** 2).sum(1), atol=1e-8)
+        np.testing.assert_allclose(
+            eng.squared_row_sums(class_ids=y, block=53), per_class,
+            atol=1e-8)
+        np.testing.assert_allclose(
+            eng.squared_row_sums(class_ids=y, X=Xq, block=7), per_class_q,
+            atol=1e-8)
+
+
+# --------------------------------------------- sharded matmat (satellite) ---
+def test_sharded_matmat_single_device_fallback(app_kernel_cache):
+    """On one device default_mesh() gates off and matmat takes the segment
+    path, still agreeing with scipy."""
+    import jax
+    from repro.core.jax_ops import default_mesh
+    if jax.device_count() > 1:
+        pytest.skip("requires a single-device jax runtime")
+    assert default_mesh() is None
+    eng = app_kernel_cache["jax"].engine
+    rng = np.random.default_rng(2)
+    V = rng.normal(size=(eng.W.shape[0], 3))
+    ref = app_kernel_cache["scipy"].engine.matmat(V)
+    np.testing.assert_allclose(eng.matmat(V), ref, atol=1e-8)
+    assert eng.last_matmat_path == "segment"
+
+
+def test_engine_sharded_matmat_multi_device():
+    """Forced 8-host-device subprocess: the train-state jax matmat routes
+    through sharded_swlc_matmat and agrees with scipy; OOS batches fall back
+    to the segment path."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(repo, "src"))
+    code = textwrap.dedent("""
+        import numpy as np
+        from repro.core.api import ForestKernel
+        from repro.data.synthetic import gaussian_classes
+        X, y = gaussian_classes(160, d=8, n_classes=3, seed=5)
+        fk = ForestKernel(kernel_method="gap", n_trees=10, seed=0,
+                          engine_backend="jax").fit(X, y)
+        ref = ForestKernel(kernel_method="gap", n_trees=10, seed=0)
+        ref.forest = fk.forest
+        ref.build_kernel_cache()
+        V = np.random.default_rng(0).normal(size=(160, 3))
+        np.testing.assert_allclose(fk.engine.matmat(V),
+                                   ref.engine.matmat(V), atol=1e-8)
+        assert fk.engine.last_matmat_path == "sharded", \\
+            fk.engine.last_matmat_path
+        Xq = X[:21] + 1e-3
+        np.testing.assert_allclose(fk.engine.matmat(V, X=Xq),
+                                   ref.engine.matmat(V, X=Xq), atol=1e-8)
+        assert fk.engine.last_matmat_path == "segment"
+        # wide V splits into sharded column chunks (forced tiny budget)
+        from repro.core import jax_ops
+        orig = jax_ops.auto_c_chunk
+        jax_ops.auto_c_chunk = lambda *a, **k: 3
+        W = np.random.default_rng(1).normal(size=(160, 10))
+        np.testing.assert_allclose(fk.engine.matmat(W),
+                                   ref.engine.matmat(W), atol=1e-8)
+        assert fk.engine.last_matmat_path == "sharded"
+        jax_ops.auto_c_chunk = orig
+        print("SHARDED ENGINE OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    assert "SHARDED ENGINE OK" in r.stdout

@@ -50,6 +50,45 @@ def test_swlc_matmat_and_block():
     np.testing.assert_allclose(np.asarray(B), P[:16], rtol=2e-4, atol=2e-4)
 
 
+def test_swlc_matmat_tree_chunked_matches_unchunked():
+    """t_chunk must not change results for any chunk size (incl. padding)."""
+    rng = np.random.default_rng(2)
+    n, T, lpt = 50, 7, 4
+    gl = _leafset(rng, n, T, lpt)
+    q = rng.random((n, T)).astype(np.float32)
+    w = rng.random((n, T)).astype(np.float32)
+    V = rng.random((n, 3)).astype(np.float32)
+    ref = np.asarray(swlc_matmat(jnp.asarray(gl), jnp.asarray(q),
+                                 jnp.asarray(w), jnp.asarray(V), T * lpt))
+    for tc in (1, 2, 3, 7, 16):
+        got = swlc_matmat(jnp.asarray(gl), jnp.asarray(q), jnp.asarray(w),
+                          jnp.asarray(V), T * lpt, t_chunk=tc)
+        np.testing.assert_allclose(np.asarray(got), ref, rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_swlc_matmat_large_C_chunked_regression():
+    """ROADMAP PR-1 follow-up: at C large enough that the unchunked
+    (N, T, C) intermediate dominates memory (256·64·4096 ≈ 67M elements,
+    ~268 MB f32 — vs ~256 KB of factors), auto_t_chunk must engage and the
+    chunked product must still match the dense oracle."""
+    from repro.core.jax_ops import auto_t_chunk
+    rng = np.random.default_rng(3)
+    n, T, lpt, C = 256, 64, 8, 4096
+    tc = auto_t_chunk(n, T, C)
+    assert tc is not None and tc < T, tc                    # chunking engaged
+    assert n * tc * C <= 1 << 24                            # bounded interm.
+    assert auto_t_chunk(256, 64, 4) is None                 # small C: off
+    gl = _leafset(rng, n, T, lpt)
+    q = rng.random((n, T)).astype(np.float32)
+    w = rng.random((n, T)).astype(np.float32)
+    V = rng.random((n, C)).astype(np.float32)
+    P = naive_swlc(gl, gl, q, w)
+    got = swlc_matmat(jnp.asarray(gl), jnp.asarray(q), jnp.asarray(w),
+                      jnp.asarray(V), T * lpt, t_chunk=tc)
+    np.testing.assert_allclose(np.asarray(got), P @ V, rtol=2e-3, atol=2e-3)
+
+
 def test_swlc_predict_oos():
     rng = np.random.default_rng(1)
     n, nq, T, lpt = 60, 9, 8, 4

@@ -1,0 +1,153 @@
+"""Proximity-serving benchmark: full vs prototype-compressed engine.
+
+  PYTHONPATH=src:. python -m benchmarks.bench_serving_prox
+      [--n 50000] [--trees 50] [--backend auto] [--out BENCH_serving_prox.json]
+
+Fits one forest at ``--n`` training samples, builds (a) the full
+``ProximityEngine`` and (b) its prototype-compressed counterpart
+(``applications.prototypes.compress``), then drives identical mixed request
+streams (predict / topk / outlier) through a ``ProximityServer`` on each and
+reports per-request latency percentiles, throughput, factor memory, and the
+accuracy cost of compression (OOS predict accuracy + agreement with the full
+engine).  The headline acceptance: compressed serving must beat the full
+engine on both p50 latency and factor memory at 50k training samples.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.applications.prototypes import compress
+from repro.core.api import ForestKernel
+from repro.data.synthetic import gaussian_classes, train_test_split
+from repro.forest import _native
+from repro.serve.proximity import ProximityServer
+
+
+def _workload(Xte, n_requests: int, rows: int, seed: int = 0):
+    """Deterministic mixed request stream over held-out rows."""
+    rng = np.random.default_rng(seed)
+    kinds = ["predict", "predict", "topk", "outlier"]   # 2:1:1 mix
+    reqs = []
+    for i in range(n_requests):
+        kind = kinds[i % len(kinds)]
+        sel = rng.integers(0, len(Xte), size=rows)
+        if kind == "topk":
+            reqs.append((kind, Xte[sel], 10))
+        else:
+            reqs.append((kind, Xte[sel]))
+    return reqs
+
+
+def _drive(server: ProximityServer, reqs, yte_for=None) -> dict:
+    # warmup: build routed state / ref tables / train outlier stats once
+    server.serve(reqs[:2])
+    server.finished.clear()
+    t0 = time.perf_counter()
+    server.serve(reqs)
+    wall = time.perf_counter() - t0
+    st = server.stats()
+    lat = [r.latency_s for r in server.finished]
+    svc = [r.service_s for r in server.finished]
+    rows = sum(r.n_rows for r in server.finished)
+    out = {
+        "requests": len(server.finished),
+        "rows": rows,
+        "wall_s": round(wall, 3),
+        "rows_per_s": round(rows / wall, 1),
+        "p50_ms": round(float(np.percentile(lat, 50) * 1e3), 3),
+        "p95_ms": round(float(np.percentile(lat, 95) * 1e3), 3),
+        "p50_service_ms": round(float(np.percentile(svc, 50) * 1e3), 3),
+        "ticks": st["ticks"],
+        "kinds": st["kinds"],
+    }
+    if yte_for is not None:
+        Xte, yte = yte_for
+        labels = server.serve([("predict", Xte)])[0]["labels"]
+        out["oos_accuracy"] = round(float((labels == yte).mean()), 4)
+        out["oos_labels"] = labels
+    return out
+
+
+def run(n: int = 50_000, d: int = 20, trees: int = 50, backend: str = "auto",
+        n_prototypes: int = 20, proto_k: int = 100, n_slots: int = 64,
+        n_requests: int = 120, rows_per_request: int = 16,
+        out_path: str = "BENCH_serving_prox.json") -> dict:
+    if backend == "auto":
+        backend = "native" if _native.available() else "scipy"
+    X, y = gaussian_classes(n + 2000, d=d, n_classes=4, seed=0)
+    Xtr, ytr, Xte, yte = train_test_split(X, y, test_frac=2000 / (n + 2000),
+                                          seed=0)
+    acc_slice = slice(0, min(len(Xte), n_slots))
+    report = {"config": {"n": len(Xtr), "d": d, "trees": trees,
+                         "backend": backend, "n_prototypes": n_prototypes,
+                         "proto_k": proto_k, "n_slots": n_slots,
+                         "n_requests": n_requests,
+                         "rows_per_request": rows_per_request}}
+    t0 = time.perf_counter()
+    fk = ForestKernel(kernel_method="gap", n_trees=trees, seed=0,
+                      engine_backend=backend).fit(Xtr, ytr)
+    report["fit_s"] = round(time.perf_counter() - t0, 1)
+    print(f"fitted n={len(Xtr)} trees={trees} backend={backend} "
+          f"in {report['fit_s']}s", flush=True)
+
+    t0 = time.perf_counter()
+    ce = compress(fk.engine, ytr, n_prototypes=n_prototypes, k=proto_k)
+    report["compress_s"] = round(time.perf_counter() - t0, 1)
+
+    reqs = _workload(Xte, n_requests, rows_per_request)
+    results = {}
+    for name, engine, labels in (("full", fk.engine, ytr),
+                                 ("compressed", ce, ce.prototype_labels_)):
+        server = ProximityServer(engine, y=labels, n_slots=n_slots)
+        res = _drive(server, reqs,
+                     yte_for=(Xte[acc_slice], yte[acc_slice]))
+        res["memory_bytes"] = int(engine.memory_bytes()["total"])
+        res["reference_columns"] = int(engine.W.shape[0])
+        results[name] = res
+        print(f"{name:>10}: p50 {res['p50_ms']}ms  p95 {res['p95_ms']}ms  "
+              f"{res['rows_per_s']} rows/s  mem {res['memory_bytes']>>20}MiB  "
+              f"acc {res['oos_accuracy']}", flush=True)
+
+    agree = float((results["full"].pop("oos_labels")
+                   == results["compressed"].pop("oos_labels")).mean())
+    report.update(results)
+    report["compressed_vs_full"] = {
+        "predict_agreement": round(agree, 4),
+        "p50_speedup": round(results["full"]["p50_ms"]
+                             / results["compressed"]["p50_ms"], 2),
+        "memory_ratio": round(results["full"]["memory_bytes"]
+                              / results["compressed"]["memory_bytes"], 1),
+    }
+    print("compressed vs full:", json.dumps(report["compressed_vs_full"]),
+          flush=True)
+    with open(out_path, "w") as fh:
+        json.dump(report, fh, indent=2)
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=50_000)
+    ap.add_argument("--d", type=int, default=20)
+    ap.add_argument("--trees", type=int, default=50)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "scipy", "jax", "pallas", "native"])
+    ap.add_argument("--prototypes", type=int, default=20)
+    ap.add_argument("--proto-k", type=int, default=100)
+    ap.add_argument("--slots", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=120)
+    ap.add_argument("--rows", type=int, default=16)
+    ap.add_argument("--out", default="BENCH_serving_prox.json")
+    args = ap.parse_args()
+    run(n=args.n, d=args.d, trees=args.trees, backend=args.backend,
+        n_prototypes=args.prototypes, proto_k=args.proto_k,
+        n_slots=args.slots, n_requests=args.requests,
+        rows_per_request=args.rows, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Out-of-sample proximity serving end-to-end: fit a forest kernel, warm the
+application states, prototype-compress it, then serve a mixed request stream
+(predict / topk / outlier / propagate / embed) through the continuous-batching
+``ProximityServer`` and compare the full and compressed models.
+
+  PYTHONPATH=src python examples/serve_proximities.py [--n 4000]
+      [--trees 30] [--backend auto] [--slots 32]
+"""
+import argparse
+
+import numpy as np
+
+from repro.applications.embed import ProximityEmbedding
+from repro.applications.prototypes import compress
+from repro.core.api import ForestKernel
+from repro.data.synthetic import gaussian_classes, train_test_split
+from repro.forest import _native
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4000)
+    ap.add_argument("--d", type=int, default=12)
+    ap.add_argument("--trees", type=int, default=30)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "scipy", "jax", "pallas", "native"])
+    ap.add_argument("--slots", type=int, default=32)
+    args = ap.parse_args()
+    backend = args.backend
+    if backend == "auto":
+        backend = "native" if _native.available() else "scipy"
+
+    X, y = gaussian_classes(args.n, d=args.d, n_classes=4, sep=3.0, seed=0)
+    Xtr, ytr, Xte, yte = train_test_split(X, y, test_frac=0.2, seed=0)
+    fk = ForestKernel(kernel_method="gap", n_trees=args.trees, seed=0,
+                      engine_backend=backend).fit(Xtr, ytr)
+    print(f"fitted: {len(Xtr)} samples, {args.trees} trees, "
+          f"engine backend={backend}")
+
+    # serving-side application states: warm-started propagation + embedding
+    rng = np.random.default_rng(0)
+    labeled = rng.random(len(ytr)) < 0.1
+    propagator = fk.propagate_labels(labeled, online=True)
+    embedding = ProximityEmbedding(n_components=2).fit(fk.engine)
+
+    # 1. full-engine server: mixed request stream
+    srv = fk.serve(n_slots=args.slots, propagator=propagator,
+                   embedding=embedding)
+    reqs = [("predict", Xte[:16]), ("topk", Xte[16:24], 5),
+            ("outlier", Xte[24:40]), ("propagate", Xte[40:56]),
+            ("embed", Xte[56:72]), ("predict", Xte[72:88])]
+    res = srv.serve(reqs)
+    acc = np.mean(np.concatenate([res[0]["labels"], res[5]["labels"]])
+                  == np.concatenate([yte[:16], yte[72:88]]))
+    st = srv.stats()
+    print(f"full engine: {st['requests']} requests / {st['rows']} rows in "
+          f"{st['ticks']} ticks, predict acc {acc:.3f}")
+    for kind, ks in sorted(st["kinds"].items()):
+        print(f"  {kind:>9}: n={ks['requests']}  p50 {ks['p50_ms']:.2f}ms  "
+              f"p95 {ks['p95_ms']:.2f}ms")
+    assert acc > 0.9, "full-engine serving must predict accurately"
+
+    # 2. prototype compression: low-memory serving model
+    ce = compress(fk.engine, ytr, n_prototypes=10, k=60)
+    ratio = fk.engine.memory_bytes()["total"] / ce.memory_bytes()["total"]
+    print(f"compressed: {ce.W.shape[0]} prototype columns vs "
+          f"{fk.engine.W.shape[0]} training columns "
+          f"({ratio:.1f}x smaller factors, per-class coverage "
+          f"{ {c: round(v, 2) for c, v in ce.coverage_.items()} })")
+
+    # 3. compressed server agrees with the full model on what it serves
+    srv_c = fk.serve(n_slots=args.slots, engine=ce)
+    got = srv_c.serve([("predict", Xte[:32]), ("topk", Xte[:8], 3)])
+    full_labels = srv.serve([("predict", Xte[:32])])[0]["labels"]
+    agree = (got[0]["labels"] == full_labels).mean()
+    acc_c = (got[0]["labels"] == yte[:32]).mean()
+    print(f"compressed serving: predict agreement {agree:.3f} vs full, "
+          f"accuracy {acc_c:.3f}; topk serves training-row ids "
+          f"{got[1]['indices'][0]}")
+    assert agree >= 0.85, "compression must roughly preserve predictions"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

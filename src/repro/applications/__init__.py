@@ -16,10 +16,14 @@ materialized for more rows than a streaming chunk.
 """
 from .embed import ProximityEmbedding
 from .imputation import ProximityImputer
-from .outliers import outlier_scores
-from .propagate import propagate_labels
-from .prototypes import NearestPrototypeClassifier, select_prototypes
+from .outliers import oos_outlier_scores, outlier_scores, train_outlier_stats
+from .propagate import OnlineLabelPropagation, propagate_labels
+from .prototypes import (CompressedProximityEngine,
+                         NearestPrototypeClassifier, compress,
+                         select_prototypes)
 
-__all__ = ["ProximityImputer", "outlier_scores", "select_prototypes",
-           "NearestPrototypeClassifier", "propagate_labels",
+__all__ = ["ProximityImputer", "outlier_scores", "oos_outlier_scores",
+           "train_outlier_stats", "select_prototypes", "compress",
+           "CompressedProximityEngine", "NearestPrototypeClassifier",
+           "propagate_labels", "OnlineLabelPropagation",
            "ProximityEmbedding"]

@@ -18,7 +18,7 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["outlier_scores"]
+__all__ = ["outlier_scores", "oos_outlier_scores", "train_outlier_stats"]
 
 
 def outlier_scores(engine, y: np.ndarray, normalize: bool = True,
@@ -59,3 +59,81 @@ def outlier_scores(engine, y: np.ndarray, normalize: bool = True,
         mad = np.median(np.abs(raw[m] - med))
         out[m] = (raw[m] - med) / max(mad, np.finfo(np.float64).tiny)
     return out
+
+
+def train_outlier_stats(engine, y: np.ndarray,
+                        n_classes: Optional[int] = None,
+                        block: int = 4096) -> dict:
+    """Per-class training statistics for outlier scoring, cached on the
+    engine (``engine._app_cache``): class counts and the median/MAD of the
+    raw training scores per class.  Serving calls reuse them so an OOS batch
+    never triggers a training-set pass.
+    """
+    y = np.asarray(y, dtype=np.int64)
+    if n_classes is None:
+        n_classes = int(y.max()) + 1
+    key = ("outlier_stats", y.tobytes(), n_classes)
+    hit = engine._app_cache.get(key)
+    if hit is not None:
+        return hit
+    raw = outlier_scores(engine, y, normalize=False, n_classes=n_classes,
+                         block=block)
+    counts = np.bincount(y, minlength=n_classes).astype(np.float64)
+    med = np.zeros(n_classes)
+    mad = np.full(n_classes, np.finfo(np.float64).tiny)
+    for c in range(n_classes):
+        m = y == c
+        if not m.any():
+            continue
+        med[c] = np.median(raw[m])
+        mad[c] = max(np.median(np.abs(raw[m] - med[c])),
+                     np.finfo(np.float64).tiny)
+    stats = {"counts": counts, "median": med, "mad": mad,
+             "n_train": len(y), "n_classes": n_classes}
+    engine._app_cache[key] = stats
+    return stats
+
+
+def oos_outlier_scores(engine, y: np.ndarray, X: np.ndarray,
+                       y_query: Optional[np.ndarray] = None,
+                       normalize: bool = True,
+                       n_classes: Optional[int] = None, block: int = 4096,
+                       return_classes: bool = False):
+    """Out-of-sample outlier scores against the *training* class statistics.
+
+    raw(x) = n_c / Σ_{j: y_j = c} P(x, j)² with c the query's class —
+    ``y_query`` when given, otherwise the class maximizing the mean squared
+    proximity (the densest class neighborhood, i.e. minimum raw
+    outlyingness).  Normalization subtracts the **train** per-class median
+    and divides by the **train** per-class MAD (cached on the engine via
+    :func:`train_outlier_stats`), so OOS scores are directly comparable to
+    the training scores — a score ≫ 0 means "far outside its class by the
+    class's own training spread".
+    """
+    y = np.asarray(y, dtype=np.int64)
+    stats = train_outlier_stats(engine, y, n_classes=n_classes, block=block)
+    n_classes = stats["n_classes"]
+    sq = engine.squared_row_sums(class_ids=y, n_classes=n_classes, X=X,
+                                 block=block)             # (Nq, C)
+    nq = sq.shape[0]
+    counts = stats["counts"]
+    if y_query is not None:
+        cls = np.asarray(y_query, dtype=np.int64)
+    else:
+        with np.errstate(invalid="ignore"):
+            dens = sq / np.maximum(counts, 1.0)[None, :]
+        cls = dens.argmax(axis=1) if nq else np.zeros(0, dtype=np.int64)
+    own = sq[np.arange(nq), cls]
+    cap = float(stats["n_train"]) ** 2
+    with np.errstate(divide="ignore", over="ignore"):
+        raw = counts[cls] / np.maximum(own, np.finfo(np.float64).tiny)
+    raw = np.minimum(raw, cap)
+    if normalize:
+        # a degenerate class MAD can push capped raw scores past float64
+        # range; the cap keeps the *score* semantics (maximal outlyingness)
+        with np.errstate(over="ignore", divide="ignore"):
+            scores = (raw - stats["median"][cls]) / stats["mad"][cls]
+        scores = np.minimum(scores, np.finfo(np.float64).max)
+    else:
+        scores = raw
+    return (scores, cls) if return_classes else scores

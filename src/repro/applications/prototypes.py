@@ -7,6 +7,14 @@ greedy set cover over proximity neighborhoods.  Neighborhoods come from
 ``ProximityEngine.topk`` (streamed block top-k, never a dense P), and the
 nearest-prototype classifier scores queries against the selected prototype
 columns only, via ``kernel_block``.
+
+:func:`compress` turns the selection into a **prototype-restricted engine**:
+a ``ProximityEngine`` view whose reference side is the k prototype columns
+instead of all N training columns.  Every engine op (matmat / predict /
+topk / squared_row_sums / …) works unchanged against the restricted
+reference set, OOS query routing is shared with the parent engine (one
+routed state serves both), and the factor memory shrinks by ~N/k — the
+low-memory model the serving layer deploys.
 """
 from __future__ import annotations
 
@@ -15,7 +23,10 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["select_prototypes", "NearestPrototypeClassifier"]
+from ..core.engine import ProximityEngine
+
+__all__ = ["select_prototypes", "NearestPrototypeClassifier", "compress",
+           "CompressedProximityEngine"]
 
 
 def select_prototypes(engine, y: np.ndarray, n_prototypes: int = 3,
@@ -93,3 +104,68 @@ class NearestPrototypeClassifier:
                 block: int = 4096) -> np.ndarray:
         B = self.decision_function(X, block=block)
         return self.prototype_labels_[B.argmax(axis=1)]
+
+
+class CompressedProximityEngine(ProximityEngine):
+    """Prototype-restricted view of a fitted ``ProximityEngine``.
+
+    The reference side (columns of P) is sliced down to ``indices`` — every
+    inherited op then runs against k prototype columns instead of N training
+    columns, with factor memory to match.  The training query state is
+    restricted to the same rows (the compressed model's "training set" *is*
+    the prototype set); OOS query states are shared with the parent engine,
+    so a batch routed once serves both the full and the compressed model.
+
+    Never calls ``ProximityEngine.__init__`` — all state is sliced views of
+    the parent's arrays (CSR row slices copy their nnz, dense slices are
+    fancy-indexed copies of k rows).
+    """
+
+    def __init__(self, parent: ProximityEngine, indices: np.ndarray,
+                 labels: Optional[np.ndarray] = None,
+                 coverage: Optional[Dict[int, float]] = None):
+        indices = np.asarray(indices, dtype=np.int64)
+        self.parent = parent
+        self.prototype_indices_ = indices
+        self.prototype_labels_ = labels
+        self.coverage_ = coverage
+        self.ctx = parent.ctx
+        self.assignment = parent.assignment
+        self.forest = parent.forest
+        self.backend = parent.backend
+        self.dtype = parent.dtype
+        self.total_leaves = parent.total_leaves
+        self.gl = np.ascontiguousarray(parent.gl[indices])
+        self.q = np.ascontiguousarray(parent.q[indices])
+        self.w = self.q if parent.w is parent.q else \
+            np.ascontiguousarray(parent.w[indices])
+        self.Q = parent.Q[indices].tocsr()
+        self.W = self.Q if parent.W is parent.Q else \
+            parent.W[indices].tocsr()
+        self.leaf_values = parent.leaf_values
+        # shared routed OOS states; everything else (ref tables, app caches,
+        # row sums) is per-view — see ProximityEngine._init_runtime_state
+        self._init_runtime_state(oos_cache=parent._oos_cache,
+                                 oos_cache_size=parent._oos_cache_size,
+                                 ref_cache_size=parent._ref_cache_size)
+
+
+def compress(engine: ProximityEngine, y: np.ndarray,
+             n_prototypes: int = 10, k: int = 50) -> CompressedProximityEngine:
+    """Prototype-compress a fitted engine for low-memory serving.
+
+    Selects ``n_prototypes`` greedy coverage prototypes per class (see
+    :func:`select_prototypes`) and returns the engine restricted to those
+    reference columns.  ``.prototype_labels_`` holds the class of each
+    column — the label vector to hand to ``predict`` — and
+    ``.memory_bytes()`` reflects the compressed factors.
+    """
+    y = np.asarray(y, dtype=np.int64)
+    protos, coverage = select_prototypes(engine, y,
+                                         n_prototypes=n_prototypes, k=k)
+    classes = sorted(protos)
+    indices = np.concatenate([protos[c] for c in classes])
+    labels = np.concatenate([np.full(len(protos[c]), c, dtype=np.int64)
+                             for c in classes])
+    return CompressedProximityEngine(engine, indices, labels=labels,
+                                     coverage=coverage)

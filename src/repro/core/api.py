@@ -48,7 +48,7 @@ class ForestKernel:
     n_bins: int = 64
     seed: int = 0
     dtype: type = np.float64
-    engine_backend: str = "scipy"    # 'scipy' | 'jax' | 'pallas'
+    engine_backend: str = "scipy"    # 'scipy' | 'jax' | 'pallas' | 'native'
     routing_backend: str = "auto"    # 'auto'|'native'|'numpy'|'jax'|'pallas'
     n_jobs: int = 0                  # tree-fitting workers (0 = auto)
 
@@ -161,6 +161,34 @@ class ForestKernel:
         return outlier_scores(self.engine, self.ctx.y, normalize=normalize,
                               block=block)
 
+    def oos_outlier_scores(self, X: np.ndarray,
+                           y_query: Optional[np.ndarray] = None,
+                           normalize: bool = True,
+                           block: int = 4096) -> np.ndarray:
+        """Out-of-sample outlier scores against cached per-class *training*
+        statistics (see ``applications.outliers.oos_outlier_scores``)."""
+        from ..applications.outliers import oos_outlier_scores
+        return oos_outlier_scores(self.engine, self.ctx.y, X,
+                                  y_query=y_query, normalize=normalize,
+                                  block=block)
+
+    def compress(self, n_prototypes: int = 10, k: int = 50):
+        """Prototype-compressed engine (k·C reference columns instead of N)
+        for low-memory serving; see ``applications.prototypes.compress``."""
+        from ..applications.prototypes import compress
+        return compress(self.engine, self.ctx.y, n_prototypes=n_prototypes,
+                        k=k)
+
+    def serve(self, n_slots: int = 64, engine=None, **kw):
+        """A ``ProximityServer`` over this kernel's engine (or a compressed
+        engine passed via ``engine=``); see ``repro.serve.proximity``."""
+        from ..serve.proximity import ProximityServer
+        eng = self.engine if engine is None else engine
+        y = getattr(eng, "prototype_labels_", None)
+        if y is None:
+            y = self.ctx.y
+        return ProximityServer(eng, y=y, n_slots=n_slots, **kw)
+
     def prototypes(self, n_prototypes: int = 3, k: int = 50):
         """Greedy tree-space prototypes per class: (prototypes, coverage)."""
         from ..applications.prototypes import select_prototypes
@@ -169,12 +197,14 @@ class ForestKernel:
 
     def propagate_labels(self, labeled: np.ndarray,
                          y: Optional[np.ndarray] = None, alpha: float = 0.8,
-                         n_iter: int = 50, tol: float = 1e-5):
-        """Semi-supervised label propagation: (labels, class scores)."""
+                         n_iter: int = 50, tol: float = 1e-5,
+                         online: bool = False):
+        """Semi-supervised label propagation: (labels, class scores), or an
+        ``OnlineLabelPropagation`` serving state when ``online=True``."""
         from ..applications.propagate import propagate_labels
         yy = self.ctx.y if y is None else y
         return propagate_labels(self.engine, yy, labeled, alpha=alpha,
-                                n_iter=n_iter, tol=tol)
+                                n_iter=n_iter, tol=tol, online=online)
 
     def embed(self, n_components: int = 2, method: str = "auto",
               seed: int = 0):

@@ -18,6 +18,16 @@ Backends
 ``pallas``  same segment-sum matvec/matmat, but dense block queries and
             top-k go through the ``block_prox`` Pallas kernel (interpret
             mode off-TPU).
+``native``  the lazily-compiled C kernels of ``forest._native`` (the same
+            ``.so`` as the native router): bucket/gather matmat and dense
+            collision blocks, accumulating in float64 like scipy.  Needs a
+            host compiler — gate on ``forest._native.available()``.
+
+Serving note: the bucket table S = Wᵀ V of every factored product depends
+only on the reference side, so for narrow V it is LRU-cached by V content
+(scipy + native paths).  A serving loop calling ``predict(X=batch)`` every
+tick with the same labels pays the O(N T C) bucket once and only the
+O(n_batch T C) query-side gather per tick.
 
 No path in this module iterates over trees in Python.
 """
@@ -32,13 +42,14 @@ import numpy as np
 import scipy.sparse as sp
 from scipy.sparse.linalg import LinearOperator
 
+from ..forest import _native
 from .factorization import (full_kernel, kernel_block, kernel_matvec_operator,
-                            proximity_predict, topk_neighbors)
+                            topk_neighbors)
 from .leafmap import build_leaf_map
 
 __all__ = ["ProximityEngine", "QueryState", "ENGINE_BACKENDS"]
 
-ENGINE_BACKENDS = ("scipy", "jax", "pallas")
+ENGINE_BACKENDS = ("scipy", "jax", "pallas", "native")
 
 
 @dataclasses.dataclass
@@ -60,10 +71,16 @@ class ProximityEngine:
     """Serves matvec / matmat / predict / topk / kernel_block for P = Q Wᵀ."""
 
     def __init__(self, ctx, assignment, forest=None, backend: str = "scipy",
-                 dtype=np.float64, oos_cache_size: int = 8):
+                 dtype=np.float64, oos_cache_size: int = 8,
+                 ref_cache_size: int = 16):
         if backend not in ENGINE_BACKENDS:
             raise ValueError(f"unknown engine backend {backend!r}; "
                              f"have {ENGINE_BACKENDS}")
+        if backend == "native" and not _native.available():
+            raise RuntimeError(
+                "engine backend 'native' needs a host C compiler (cc/gcc) "
+                "and REPRO_DISABLE_NATIVE unset; gate on "
+                "forest._native.available() or use backend='scipy'")
         self.ctx = ctx
         self.assignment = assignment
         self.forest = forest
@@ -90,12 +107,40 @@ class ProximityEngine:
         self.leaf_values = None if forest is None else \
             getattr(forest, "leaf_values_", None)
 
+        self._init_runtime_state(oos_cache_size=oos_cache_size,
+                                 ref_cache_size=ref_cache_size)
+
+    def _init_runtime_state(self, oos_cache=None, oos_cache_size: int = 8,
+                            ref_cache_size: int = 16) -> None:
+        """Per-engine mutable state; the single place both the primary
+        constructor and factor-slicing views (CompressedProximityEngine)
+        initialize it, so new runtime attributes cannot silently go missing
+        on one of them.  Expects the factor attributes (gl/q/w/Q/W, dtype,
+        backend, …) to be set already."""
         self._train_state = QueryState(gl=self.gl, q=self.q, Q=self.Q)
-        self._oos_cache: "OrderedDict[str, QueryState]" = OrderedDict()
+        # routed OOS query states; a view may share its parent's cache (one
+        # routed batch serves both engines)
+        self._oos_cache: "OrderedDict[str, QueryState]" = \
+            OrderedDict() if oos_cache is None else oos_cache
         self._oos_cache_size = oos_cache_size
         self._use_x64 = self.dtype == np.float64
         self._train_row_sums: Optional[np.ndarray] = None
         self.last_matmat_path: Optional[str] = None   # 'sharded' | 'segment'
+        # reference bucket tables S = Wᵀ V (serving), LRU of key ->
+        # (keepalive V | None, S).  Sized above the number of distinct
+        # fixed tables a mixed serving tick touches (labels, ones,
+        # propagation field, Nyström basis, per-class masks) so rotating
+        # inserts from iterative solvers cannot thrash the hot entries;
+        # additionally bounded in bytes so huge-L engines cannot pin
+        # hundreds of MB of dead tables.
+        self._ref_cache: "OrderedDict[object, tuple]" = OrderedDict()
+        self._ref_cache_size = ref_cache_size
+        self._ref_cache_bytes = 0
+        self._ref_cache_byte_budget = 1 << 27          # 128 MiB of tables
+        # label tables for predict, memoized by label-array identity (small
+        # LRU; cached arrays are treated as immutable)
+        self._label_cache: "OrderedDict[object, tuple]" = OrderedDict()
+        self._app_cache: dict = {}    # application-level per-engine caches
 
     # ---------------- query-state management ----------------
     @staticmethod
@@ -151,22 +196,73 @@ class ProximityEngine:
         if col_mask is not None:
             V = V * np.asarray(col_mask, dtype=self.dtype)[:, None]
         qs = self.query_state(X)
-        if self.backend == "scipy":
-            out = np.asarray(qs.Q @ (self.W.T @ V))
-        else:
-            out = self._segment_matmat(qs, V)
+        out = self._dispatch_matmat(qs, V)
         if normalized:
             d = self.row_sums(X=X)
             out = out / np.maximum(d, np.finfo(self.dtype).tiny)[:, None]
         return out
+
+    def _dispatch_matmat(self, qs: QueryState, V: np.ndarray,
+                         ref_key=None) -> np.ndarray:
+        """Backend dispatch for (P V) on an already-resolved query state."""
+        if self.backend == "scipy":
+            return np.asarray(qs.Q @ self._ref_table(V, key=ref_key))
+        if self.backend == "native":
+            out = _native.prox_gather_native(qs.gl, qs.q,
+                                             self._ref_table(V, key=ref_key))
+            return out.astype(self.dtype, copy=False)
+        return self._segment_matmat(qs, V)
+
+    def _ref_table(self, V: np.ndarray, key=None) -> np.ndarray:
+        """Reference bucket table S = Wᵀ V of the factored product
+        P V = Q (Wᵀ V) — the half that does not depend on the query rows.
+
+        Narrow V (≤ 32 columns: labels, class scores, Nyström bases) is
+        LRU-cached, so a serving loop re-applying the same V every tick pays
+        the O(N_ref) bucket pass once and only the O(n_query) gather per
+        tick.  Callers whose V is content-stable across distinct array
+        objects (label tables, the ones vector) pass an explicit ``key``;
+        anonymous V is keyed by **object identity** (the array is held
+        alive in the entry so its id cannot be recycled while cached — no
+        per-call content hash anywhere, and iterative solvers whose V
+        changes every call just rotate through the LRU without hashing).
+        Cached arrays are treated as immutable; mutate a cached V in place
+        and you get the stale table.  Wide V bypasses the cache (an (L, C)
+        table would dwarf the factors), and total cached bytes are bounded.
+        """
+        keepalive = None
+        if key is None and V.shape[1] <= 32:
+            key = ("id", id(V))
+            keepalive = V
+        if key is not None:
+            hit = self._ref_cache.get(key)
+            if hit is not None:
+                self._ref_cache.move_to_end(key)
+                return hit[1]
+        if self.backend == "native":
+            S = _native.prox_bucket_native(self.gl, self.w, V,
+                                           self.total_leaves)
+        else:
+            S = np.asarray(self.W.T @ V)
+        if key is not None:
+            self._ref_cache[key] = (keepalive, S)
+            self._ref_cache_bytes += S.nbytes
+            while len(self._ref_cache) > self._ref_cache_size or \
+                    self._ref_cache_bytes > self._ref_cache_byte_budget:
+                _, (_, old) = self._ref_cache.popitem(last=False)
+                self._ref_cache_bytes -= old.nbytes
+        return S
 
     def row_sums(self, X: Optional[np.ndarray] = None) -> np.ndarray:
         """Kernel row sums Σ_j P(i,j) = P·1 through the factors (the degree
         vector of the proximity graph); cached for the training state."""
         if X is None and self._train_row_sums is not None:
             return self._train_row_sums
-        ones = np.ones(self.W.shape[0], dtype=self.dtype)
-        out = self.matvec(ones, X=X)
+        ones = np.ones((self.W.shape[0], 1), dtype=self.dtype)
+        qs = self.query_state(X)
+        # fixed V: a stable ref key keeps OOS row sums O(n_query) per call
+        out = self._dispatch_matmat(qs, ones,
+                                    ref_key=("ones", self.W.shape[0]))[:, 0]
         if X is None:
             self._train_row_sums = out
         return out
@@ -217,6 +313,13 @@ class ProximityEngine:
         collision intermediate stays within ~budget elements."""
         return max(1, budget // max(8 * n_cols, 1))
 
+    # Above this reference-set size, train-side (X=None) topk and squared
+    # row sums drop to the sparse CSR path on every backend: those are
+    # all-pairs batch jobs where CSR restricts work to colliding pairs,
+    # while the dense block paths pay the full N·N_ref·T — they exist for
+    # *small OOS query batches* on the serving path.
+    _SPARSE_TRAIN_CUTOVER = 8192
+
     # ---------------- kernel views ----------------
     def full_kernel(self, diagonal: Optional[float] = None) -> sp.csr_matrix:
         return full_kernel(self.Q, self.W, diagonal=diagonal)
@@ -234,6 +337,9 @@ class ProximityEngine:
         gl_q, q = qs.gl[rows], qs.q[rows]
         gl_w = self.gl if cols is None else self.gl[cols]
         w = self.w if cols is None else self.w[cols]
+        if self.backend == "native":
+            out = _native.prox_block_native(gl_q, q, gl_w, w)
+            return out.astype(self.dtype, copy=False)
         if self.backend == "jax":
             import jax.numpy as jnp
             from .jax_ops import swlc_block
@@ -271,7 +377,8 @@ class ProximityEngine:
         else:
             out = np.zeros(n, dtype=self.dtype)
 
-        if self.backend == "scipy":
+        if self.backend == "scipy" or (
+                X is None and self.W.shape[0] > self._SPARSE_TRAIN_CUTOVER):
             WT = self.W.T.tocsc()
             for i0 in range(0, n, block):
                 B = (qs.Q[i0:i0 + block] @ WT).tocsr()
@@ -301,6 +408,35 @@ class ProximityEngine:
         return out
 
     # ---------------- downstream ----------------
+    def _label_table(self, y: np.ndarray, n_classes: Optional[int]):
+        """(Y, ref_key) for predict's P·Y: one-hot classes or stacked
+        (target, ones) regression columns.
+
+        Serving calls predict with the *same* label array every tick;
+        memoizing on the array's identity (holding a reference, so the id
+        cannot be recycled while cached) makes steady-state prediction prep
+        O(1) instead of O(N_train) one-hot building + content hashing.
+        Bounded LRU: callers that rebuild their label array per call rotate
+        through it instead of growing it.  Cached label arrays are treated
+        as immutable (mutate one in place and you get stale scores).
+        """
+        memo_key = (id(y), n_classes)
+        hit = self._label_cache.get(memo_key)
+        if hit is not None and hit[0] is y:
+            self._label_cache.move_to_end(memo_key)
+            return hit[1], hit[2]
+        if n_classes is not None:
+            Y = np.zeros((len(y), n_classes), dtype=self.dtype)
+            Y[np.arange(len(y)), np.asarray(y).astype(np.int64)] = 1.0
+        else:
+            Y = np.stack([np.asarray(y, dtype=np.float64),
+                          np.ones(len(y))], axis=1).astype(self.dtype)
+        ref_key = ("labels", self._batch_key(Y))
+        self._label_cache[memo_key] = (y, Y, ref_key)
+        while len(self._label_cache) > 4:
+            self._label_cache.popitem(last=False)
+        return Y, ref_key
+
     def predict(self, y: np.ndarray, n_classes: Optional[int] = None,
                 X: Optional[np.ndarray] = None,
                 exclude_self: Optional[bool] = None) -> np.ndarray:
@@ -313,16 +449,8 @@ class ProximityEngine:
             raise ValueError("exclude_self is only defined for training-set "
                              "queries (X=None)")
         qs = self.query_state(X)
-        if self.backend == "scipy":
-            return proximity_predict(qs.Q, self.W, y, n_classes=n_classes,
-                                     exclude_self=exclude_self)
-        if n_classes is not None:
-            Y = np.zeros((len(y), n_classes), dtype=self.dtype)
-            Y[np.arange(len(y)), y.astype(np.int64)] = 1.0
-        else:
-            Y = np.stack([y.astype(np.float64),
-                          np.ones(len(y))], axis=1).astype(self.dtype)
-        out = self._segment_matmat(qs, Y)
+        Y, ref_key = self._label_table(y, n_classes)
+        out = self._dispatch_matmat(qs, Y, ref_key=ref_key)
         if exclude_self:
             # own-row contribution: same gl on both sides -> Σ_t q_t w_t
             diag = (qs.q * self.w).sum(axis=1)
@@ -335,7 +463,8 @@ class ProximityEngine:
              block: int = 4096) -> Tuple[np.ndarray, np.ndarray]:
         """Per-query top-k proximities (values descending)."""
         qs = self.query_state(X)
-        if self.backend == "scipy":
+        if self.backend == "scipy" or (
+                X is None and self.W.shape[0] > self._SPARSE_TRAIN_CUTOVER):
             return topk_neighbors(qs.Q, self.W, k, block=block)
         n = qs.Q.shape[0]
         kk = min(k, self.W.shape[0])

@@ -1,19 +1,31 @@
-"""Optional native (C, via ctypes) routing kernel for the CPU hot path.
+"""Optional native (C, via ctypes) kernels for the CPU hot paths.
 
-The batched numpy router pays ~10 numpy passes per tree level; XLA pays full
-``max_depth`` for every lane because it cannot compact dynamically.  A tiny
-C loop does what neither can: per-lane early exit with one fused pass, at a
-few ns per (sample, tree) step.
+Two kernel families share one lazily-compiled ``.so``:
 
-The kernel is compiled **lazily** with whatever ``cc``/``gcc`` the host has,
-cached under ``_native_build/`` next to this module (keyed by source hash),
-and loaded through ctypes — no build-time dependency, no pip install.  If no
-compiler is available the caller falls back to the numpy path; everything is
-gated behind :func:`available`.
+**Routing** (``route_forest``): the batched numpy router pays ~10 numpy
+passes per tree level; XLA pays full ``max_depth`` for every lane because it
+cannot compact dynamically.  A tiny C loop does what neither can: per-lane
+early exit with one fused pass, at a few ns per (sample, tree) step.
 
-Exactness: the predicate is identical to the numpy/oracle path
+**Proximity** (``prox_bucket`` / ``prox_gather`` / ``prox_block``): the
+factored SWLC product P V = Q (Wᵀ V) as two fused passes over the dense
+``(gl, q, w)`` factor arrays — bucket reference rows into the (L, C) leaf
+table, then gather per query row — plus the dense collision block
+P[i, j] = Σ_t q[i,t] w[j,t] 1[gl_q[i,t] = gl_w[j,t]].  These are the
+``ProximityEngine(backend="native")`` primitives for out-of-sample serving:
+the bucket table depends only on the reference side, so the engine caches it
+across serving ticks and each tick pays O(n_query · T · C) gather only.
+
+The kernels are compiled **lazily** with whatever ``cc``/``gcc`` the host
+has, cached under ``_native_build/`` next to this module (keyed by source
+hash), and loaded through ctypes — no build-time dependency, no pip install.
+If no compiler is available the caller falls back to the numpy/scipy paths;
+everything is gated behind :func:`available`.
+
+Exactness: the routing predicate is identical to the numpy/oracle path
 (``x > float64(threshold)`` sends a sample right), so results are
-bit-identical to ``route_tree``.
+bit-identical to ``route_tree``; the proximity kernels accumulate in float64
+like the scipy reference.
 """
 from __future__ import annotations
 
@@ -27,10 +39,14 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["available", "route_native"]
+__all__ = ["available", "route_native", "prox_bucket_native",
+           "prox_gather_native", "prox_matmat_native", "prox_block_native"]
 
 _SOURCE = r"""
 #include <stdint.h>
+#ifdef _OPENMP
+#include <omp.h>
+#endif
 
 /* Route a sample block through every tree.  Layouts:
  *   X:    (n, d) float64, C-order
@@ -63,6 +79,81 @@ void route_forest(const double *X, int64_t n, int64_t d,
                 }
                 out[i * T + t] = leaf[node];
             }
+        }
+    }
+}
+
+/* ---- SWLC proximity kernels (ProximityEngine backend="native") ----
+ *
+ * Factor layouts (row-major, all contiguous):
+ *   gl: (n, T) int64 global leaf ids     q/w: (n, T) float64 SWLC weights
+ *   V:  (n, C) float64                   s:   (L, C) float64 bucket table
+ */
+
+/* Bucket stage of P V = Q (Wᵀ V): s[gl_w[j,t], c] += w[j,t] · V[j,c].
+ * The leaf scatter races under a naive omp-for, so parallelism is over
+ * column stripes: every thread walks all rows but owns a disjoint slice of
+ * C — no atomics, no per-thread (L, C) copies. */
+void prox_bucket(const int64_t *gl_w, const double *w, int64_t nw, int64_t T,
+                 const double *V, int64_t C, double *s)
+{
+    #pragma omp parallel
+    {
+        int64_t nth = 1, tid = 0;
+        #ifdef _OPENMP
+        nth = omp_get_num_threads(); tid = omp_get_thread_num();
+        #endif
+        int64_t c0 = tid * C / nth, c1 = (tid + 1) * C / nth;
+        if (c1 > c0) {
+            for (int64_t j = 0; j < nw; ++j) {
+                const double *vj = V + j * C;
+                for (int64_t t = 0; t < T; ++t) {
+                    double wj = w[j * T + t];
+                    if (wj == 0.0) continue;
+                    double *sl = s + gl_w[j * T + t] * C;
+                    for (int64_t c = c0; c < c1; ++c) sl[c] += wj * vj[c];
+                }
+            }
+        }
+    }
+}
+
+/* Gather stage: out[i,c] = Σ_t q[i,t] · s[gl_q[i,t], c]. */
+void prox_gather(const int64_t *gl_q, const double *q, int64_t nq, int64_t T,
+                 const double *s, int64_t C, double *out)
+{
+    #pragma omp parallel for schedule(static)
+    for (int64_t i = 0; i < nq; ++i) {
+        const int64_t *g = gl_q + i * T;
+        const double *qi = q + i * T;
+        double *o = out + i * C;
+        for (int64_t c = 0; c < C; ++c) o[c] = 0.0;
+        for (int64_t t = 0; t < T; ++t) {
+            double qt = qi[t];
+            if (qt == 0.0) continue;
+            const double *sl = s + g[t] * C;
+            for (int64_t c = 0; c < C; ++c) o[c] += qt * sl[c];
+        }
+    }
+}
+
+/* Dense proximity block: out[i,j] = Σ_t q[i,t] w[j,t] 1[gl_q[i,t]=gl_w[j,t]]. */
+void prox_block(const int64_t *gl_q, const double *q, int64_t nq,
+                const int64_t *gl_w, const double *w, int64_t nw,
+                int64_t T, double *out)
+{
+    #pragma omp parallel for schedule(static)
+    for (int64_t i = 0; i < nq; ++i) {
+        const int64_t *gi = gl_q + i * T;
+        const double *qi = q + i * T;
+        double *o = out + i * nw;
+        for (int64_t j = 0; j < nw; ++j) {
+            const int64_t *gj = gl_w + j * T;
+            const double *wj = w + j * T;
+            double acc = 0.0;
+            for (int64_t t = 0; t < T; ++t)
+                if (gi[t] == gj[t]) acc += qi[t] * wj[t];
+            o[j] = acc;
         }
     }
 }
@@ -133,6 +224,18 @@ def _compile() -> Optional[ctypes.CDLL]:
         ctypes.POINTER(ctypes.c_int32), ctypes.POINTER(ctypes.c_int32),
         ctypes.c_int64, ctypes.c_int64, ctypes.POINTER(ctypes.c_int32)]
     lib.route_forest.restype = None
+    pd = ctypes.POINTER(ctypes.c_double)
+    pl = ctypes.POINTER(ctypes.c_int64)
+    lib.prox_bucket.argtypes = [pl, pd, ctypes.c_int64, ctypes.c_int64,
+                                pd, ctypes.c_int64, pd]
+    lib.prox_bucket.restype = None
+    lib.prox_gather.argtypes = [pl, pd, ctypes.c_int64, ctypes.c_int64,
+                                pd, ctypes.c_int64, pd]
+    lib.prox_gather.restype = None
+    lib.prox_block.argtypes = [pl, pd, ctypes.c_int64,
+                               pl, pd, ctypes.c_int64,
+                               ctypes.c_int64, pd]
+    lib.prox_block.restype = None
     return lib
 
 
@@ -165,4 +268,70 @@ def route_native(feature_f: np.ndarray, threshold_f: np.ndarray,
         feature_f.ctypes.data_as(pi), threshold_f.ctypes.data_as(p),
         lr.ctypes.data_as(pi), leaf_f.ctypes.data_as(pi),
         n_trees, max_nodes, out.ctypes.data_as(pi))
+    return out
+
+
+# ---------------------------------------------------------------- proximity
+def _pd(a: np.ndarray):
+    return a.ctypes.data_as(ctypes.POINTER(ctypes.c_double))
+
+
+def _pl(a: np.ndarray):
+    return a.ctypes.data_as(ctypes.POINTER(ctypes.c_int64))
+
+
+def _prep(gl: np.ndarray, wts: np.ndarray, V2: Optional[np.ndarray] = None):
+    gl = np.ascontiguousarray(gl, dtype=np.int64)
+    wts = np.ascontiguousarray(wts, dtype=np.float64)
+    if V2 is None:
+        return gl, wts
+    return gl, wts, np.ascontiguousarray(V2, dtype=np.float64)
+
+
+def prox_bucket_native(gl_w: np.ndarray, w: np.ndarray, V: np.ndarray,
+                       total_leaves: int) -> np.ndarray:
+    """(L, C) leaf bucket table s[l, c] = Σ_{(j,t): gl_w[j,t]=l} w[j,t] V[j,c]
+    — the reference-side half of P V = Q (Wᵀ V), cacheable across queries."""
+    assert available(), "native kernel unavailable; check available() first"
+    gl_w, w, V = _prep(gl_w, w, V)
+    nw, T = gl_w.shape
+    C = V.shape[1]
+    s = np.zeros((total_leaves, C), dtype=np.float64)
+    _lib.prox_bucket(_pl(gl_w), _pd(w), nw, T, _pd(V), C, _pd(s))
+    return s
+
+
+def prox_gather_native(gl_q: np.ndarray, q: np.ndarray,
+                       s: np.ndarray) -> np.ndarray:
+    """(Nq, C) gather out[i, c] = Σ_t q[i,t] s[gl_q[i,t], c] — the query-side
+    half; O(Nq·T·C), independent of the reference-set size."""
+    assert available(), "native kernel unavailable; check available() first"
+    gl_q, q = _prep(gl_q, q)
+    s = np.ascontiguousarray(s, dtype=np.float64)
+    nq, T = gl_q.shape
+    C = s.shape[1]
+    out = np.empty((nq, C), dtype=np.float64)
+    _lib.prox_gather(_pl(gl_q), _pd(q), nq, T, _pd(s), C, _pd(out))
+    return out
+
+
+def prox_matmat_native(gl_q: np.ndarray, q: np.ndarray, gl_w: np.ndarray,
+                       w: np.ndarray, V: np.ndarray,
+                       total_leaves: int) -> np.ndarray:
+    """(P V) through the factors: bucket then gather, all in C."""
+    s = prox_bucket_native(gl_w, w, V, total_leaves)
+    return prox_gather_native(gl_q, q, s)
+
+
+def prox_block_native(gl_q: np.ndarray, q: np.ndarray, gl_w: np.ndarray,
+                      w: np.ndarray) -> np.ndarray:
+    """Dense (Nq, Nw) proximity block P[i,j] = Σ_t q[i,t] w[j,t]
+    1[gl_q[i,t] = gl_w[j,t]]."""
+    assert available(), "native kernel unavailable; check available() first"
+    gl_q, q = _prep(gl_q, q)
+    gl_w, w = _prep(gl_w, w)
+    nq, T = gl_q.shape
+    nw = gl_w.shape[0]
+    out = np.empty((nq, nw), dtype=np.float64)
+    _lib.prox_block(_pl(gl_q), _pd(q), nq, _pl(gl_w), _pd(w), nw, T, _pd(out))
     return out

@@ -154,6 +154,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool = False,
         t2 = time.time()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # jax <= 0.4.x returns [dict]
+            cost = cost[0] if cost else {}
         hlo_text = compiled.as_text()
         coll = collective_bytes(hlo_text)
         tc = analyze_hlo(hlo_text)    # trip-count-aware (scan bodies x L)

@@ -104,7 +104,61 @@ class _Computation:
 
 
 _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
-_OP_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(.*?\)|[^\s]+)\s+([\w\-]+)\(([^)]*)\)(.*)$")
+_OP_HDR = re.compile(
+    r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(.*?\)|[^\s]+)\s+([\w\-]+)\(")
+
+
+def _split_op(line: str) -> Optional[Tuple[str, str, str, str, str]]:
+    """(var, result_type, op, args, tail) for an HLO op line, or None.
+
+    The operand list is extracted with a balanced-paren scan rather than a
+    regex: tuple-typed inline operands (``get-tuple-element((f32[2,2],
+    s32[]) %tup)``) contain ')' and would truncate any ``[^)]*`` capture.
+    """
+    m = _OP_HDR.match(line)
+    if not m:
+        return None
+    depth, i = 1, m.end()
+    while i < len(line) and depth:
+        c = line[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+        i += 1
+    return m.group(1), m.group(2), m.group(3), line[m.end():i - 1], line[i:]
+
+
+def _operands(args: str) -> List[Tuple[str, Optional[str]]]:
+    """Parse an HLO operand list into (name, inline_type) pairs.
+
+    Operand spelling drifted across XLA versions: older text prints bare
+    names (``dot(%a, %b)``), newer text prints the operand type inline
+    (``dot(f32[4,16]{1,0} %a, (s32[], f32[2,2]) %b)``).  Split on top-level
+    commas and peel the trailing ``%name`` token; the prefix, when present,
+    is the operand's type (so shape lookups no longer depend on the defining
+    line being visible in this computation).
+    """
+    out: List[Tuple[str, Optional[str]]] = []
+    depth, cur = 0, ""
+    for ch in args + ",":
+        if ch == "," and depth == 0:
+            tok = cur.strip()
+            cur = ""
+            if not tok:
+                continue
+            parts = tok.rsplit(None, 1)
+            if len(parts) == 2 and parts[1].startswith("%"):
+                out.append((parts[1].lstrip("%"), parts[0]))
+            else:
+                out.append((tok.lstrip("%"), None))
+        else:
+            if ch in "([{":
+                depth += 1
+            elif ch in ")]}":
+                depth = max(0, depth - 1)
+            cur += ch
+    return out
 
 
 def _parse_computations(text: str) -> Tuple[Dict[str, _Computation], Optional[str]]:
@@ -145,15 +199,14 @@ def _trip_count(cond: _Computation) -> int:
 
 
 def _dot_flops(line: str, shapes: Dict[str, str]) -> float:
-    mo = _OP_RE.match(line)
-    if not mo:
+    mo = _split_op(line)
+    if mo is None:
         return 0.0
-    result_type = mo.group(2)
-    operands = [o.strip().lstrip("%") for o in mo.group(4).split(",") if o.strip()]
-    tail = mo.group(5)
+    _, result_type, _, args, tail = mo
+    operands = _operands(args)
     numel, _ = _type_numel_bytes(result_type)
-    lhs = operands[0] if operands else None
-    lhs_type = shapes.get(lhs, "")
+    lhs, lhs_inline = operands[0] if operands else (None, None)
+    lhs_type = lhs_inline or shapes.get(lhs, "")
     dims = _shape_dims(lhs_type)
     cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", tail)
     contraction = 1
@@ -181,20 +234,27 @@ def analyze_hlo(text: str) -> HloCost:
             return out
         shapes: Dict[str, str] = dict(comp.param_types)
         for line in comp.lines:
-            mo = _OP_RE.match(line)
-            if not mo:
+            mo = _split_op(line)
+            if mo is None:
                 continue
-            var, rtype, op, args, tail = mo.groups()
+            var, rtype, op, args, tail = mo
             shapes[var] = rtype
-            operands = [a.strip().lstrip("%") for a in args.split(",") if a.strip()]
+            operands = _operands(args)
+            for o, inline in operands:
+                if inline and o not in shapes:
+                    shapes[o] = inline
 
             if op == "dot":
                 out.flops += _dot_flops(line, shapes)
             if op == "while":
                 cm = re.search(r"condition=%?([\w\.\-]+)", tail)
                 bm = re.search(r"body=%?([\w\.\-]+)", tail)
+                # XLA annotates resolved loop bounds since ~2024; prefer that
+                # over scraping the condition computation for literals.
+                km = re.search(r'"known_trip_count":\s*\{"n":"(\d+)"\}', tail)
                 if cm and bm and cm.group(1) in comps:
-                    trips = _trip_count(comps[cm.group(1)])
+                    trips = int(km.group(1)) if km else \
+                        _trip_count(comps[cm.group(1)])
                     body = cost_of(bm.group(1), bytes_scope)
                     out += body.scaled(trips)
                 continue
@@ -220,8 +280,8 @@ def analyze_hlo(text: str) -> HloCost:
                                    for bo in _BYTE_OPS):
                 _, rb = _type_numel_bytes(rtype)
                 ob = 0
-                for o in operands:
-                    t = shapes.get(o)
+                for o, inline in operands:
+                    t = inline or shapes.get(o)
                     if t:
                         ob += _type_numel_bytes(t)[1]
                 out.hbm_bytes += rb + ob

@@ -6,25 +6,37 @@ touches jax device state.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
 
-__all__ = ["make_production_mesh", "make_local_mesh", "batch_axes",
-           "fsdp_axes", "MODEL_AXIS"]
+try:                                   # jax >= 0.4.38
+    from jax.sharding import AxisType
+except ImportError:                    # pragma: no cover — older jax
+    AxisType = None
+
+__all__ = ["make_production_mesh", "make_local_mesh", "compat_mesh",
+           "batch_axes", "fsdp_axes", "MODEL_AXIS"]
 
 MODEL_AXIS = "model"
+
+
+def compat_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit Auto axis types where this jax has
+    ``jax.sharding.AxisType`` (>= 0.4.38); plain mesh (implicitly Auto)
+    otherwise — the 0.4.37 compat shim mirroring ``jax_ops._shard_map``."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / CPU smoke)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return compat_mesh((data, model), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple:

@@ -1,0 +1,279 @@
+"""Continuous-batching out-of-sample proximity serving.
+
+``ProximityServer`` fronts a fitted :class:`~repro.core.engine.ProximityEngine`
+(full or prototype-compressed) with the slot design of
+:class:`~repro.serve.engine.ServingEngine`: a fixed pool of ``n_slots`` query
+slots, requests admitted FIFO into free slots as they arrive, and **one
+routed batch per tick** shared by every operation kind.
+
+Request kinds and the engine op each maps to:
+
+=============  ====================================================
+``predict``    proximity-weighted class scores  P_oos · Y
+``topk``       per-query nearest training columns (block top-k)
+``outlier``    OOS outlier scores vs cached per-class train stats
+``propagate``  warm-started online label propagation (partial_fit)
+``embed``      Nyström out-of-sample embedding transform
+=============  ====================================================
+
+Per tick the server routes the slot batch **once** (``engine.query_state``
+content-caches the routed state, so the per-kind engine calls below reuse
+it) and then issues one engine call per kind present.  All five ops are
+row-wise in the query, so each request's result is independent of which
+other requests share its tick — serving results are deterministic under
+request reordering (tested).  Products against fixed reference-side
+matrices (labels, propagation field, Nyström basis) additionally hit the
+engine's cached bucket tables on the scipy/native backends, so a
+steady-state tick costs O(n_slots · T · C), independent of the training-set
+size.
+
+The slot buffer is host-owned and mutated on admission; engine calls get a
+defensive copy (`PR-1 async buffer-aliasing race
+<../serve/engine.py>`: zero-copy ``jnp.asarray`` of a mutated numpy buffer
+corrupts in-flight batches on CPU jax).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["ProxRequest", "ProximityServer"]
+
+KINDS = ("predict", "topk", "outlier", "propagate", "embed")
+
+
+@dataclasses.dataclass
+class ProxRequest:
+    """One serving request: a batch of query rows and an operation kind."""
+
+    uid: int
+    kind: str                         # one of KINDS
+    X: np.ndarray                     # (nq, d) query rows
+    k: int = 10                       # top-k width (kind='topk' only)
+
+    # runtime (owned by the server)
+    slots: Optional[np.ndarray] = None     # assigned slot ids
+    submitted_at: float = 0.0
+    admitted_at: Optional[float] = None
+    done_at: Optional[float] = None
+    result: Any = None
+
+    @property
+    def n_rows(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return None if self.done_at is None else \
+            self.done_at - self.submitted_at
+
+    @property
+    def wait_s(self) -> Optional[float]:
+        return None if self.admitted_at is None else \
+            self.admitted_at - self.submitted_at
+
+    @property
+    def service_s(self) -> Optional[float]:
+        """In-slot time (admission → completion), excluding queue wait."""
+        return None if self.done_at is None or self.admitted_at is None \
+            else self.done_at - self.admitted_at
+
+
+class ProximityServer:
+    """Slot-batched serving loop over a ``ProximityEngine``.
+
+    Parameters
+    ----------
+    engine : ProximityEngine (or CompressedProximityEngine)
+    y : labels of the engine's **reference columns** — the training labels
+        for a full engine, ``prototype_labels_`` for a compressed one.
+        Needed by ``predict`` and ``outlier`` requests.
+    n_slots : query rows per tick; requests wider than this are rejected.
+    propagator : OnlineLabelPropagation, enables ``propagate`` requests.
+    embedding : fitted ProximityEmbedding, enables ``embed`` requests.
+    n_classes : class count (default ``y.max() + 1``).
+    """
+
+    def __init__(self, engine, y: Optional[np.ndarray] = None,
+                 n_slots: int = 64, n_classes: Optional[int] = None,
+                 propagator=None, embedding=None):
+        self.engine = engine
+        self.y = None if y is None else np.asarray(y, dtype=np.int64)
+        if n_classes is None and self.y is not None and len(self.y):
+            n_classes = int(self.y.max()) + 1
+        self.n_classes = n_classes
+        self.n_slots = int(n_slots)
+        self.propagator = propagator
+        self.embedding = embedding
+
+        self._slot_X: Optional[np.ndarray] = None    # (n_slots, d), lazy
+        self._slot_free: List[int] = list(range(self.n_slots))
+        self.active: Dict[int, ProxRequest] = {}     # uid -> request
+        self.queue: "deque[ProxRequest]" = deque()
+        self.finished: List[ProxRequest] = []
+        self._uids = itertools.count()
+        self.ticks = 0
+        self.rows_served = 0
+        self._occupancy: List[int] = []
+
+    # ---------------- public API ----------------
+    def submit(self, kind: str, X: np.ndarray, k: int = 10) -> int:
+        """Queue a request; returns its uid (see ``.finished`` / ``serve``)."""
+        if kind not in KINDS:
+            raise ValueError(f"unknown request kind {kind!r}; have {KINDS}")
+        if kind in ("predict", "outlier") and self.y is None:
+            raise ValueError(f"{kind!r} requests need reference labels y")
+        if kind == "propagate" and self.propagator is None:
+            raise ValueError("propagate requests need propagator=")
+        if kind == "embed" and self.embedding is None:
+            raise ValueError("embed requests need embedding=")
+        X = np.ascontiguousarray(X, dtype=np.float64)
+        if X.ndim != 2:
+            raise ValueError(f"X must be (n_rows, d), got {X.shape}")
+        if X.shape[0] > self.n_slots:
+            raise ValueError(f"request rows {X.shape[0]} exceed "
+                             f"n_slots={self.n_slots}; split the batch")
+        req = ProxRequest(uid=next(self._uids), kind=kind, X=X, k=int(k))
+        req.submitted_at = time.time()
+        self.queue.append(req)
+        return req.uid
+
+    def step(self) -> int:
+        """One engine tick: admit, run one engine call per kind present,
+        retire.  Returns the number of requests retired."""
+        self._admit()
+        if not self.active:
+            return 0
+        self.ticks += 1
+        self._occupancy.append(self.n_slots - len(self._slot_free))
+
+        # one routed batch per tick, in slot order; a defensive copy so no
+        # engine/backend ever aliases the mutable slot buffer (the PR-1
+        # async aliasing race pattern)
+        rows = np.sort(np.concatenate(
+            [r.slots for r in self.active.values()]))
+        X_tick = self._slot_X[rows].copy()
+        pos = {slot: i for i, slot in enumerate(rows)}   # slot -> batch row
+        self.engine.query_state(X_tick)                  # route once
+
+        by_kind: Dict[str, List[ProxRequest]] = {}
+        for req in self.active.values():
+            by_kind.setdefault(req.kind, []).append(req)
+        for kind, reqs in by_kind.items():
+            self._run_kind(kind, reqs, X_tick, pos)
+
+        retired = 0
+        now = time.time()
+        for req in list(self.active.values()):
+            req.done_at = now
+            self.finished.append(req)
+            self._slot_free.extend(int(s) for s in req.slots)
+            self.rows_served += req.n_rows
+            del self.active[req.uid]
+            retired += 1
+        return retired
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[ProxRequest]:
+        ticks = 0
+        while (self.queue or self.active) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.finished
+
+    def serve(self, requests, max_ticks: int = 10_000) -> List[Any]:
+        """Submit ``(kind, X[, k])`` tuples, drain, return results in order."""
+        uids = [self.submit(*r) for r in requests]
+        self.run_until_drained(max_ticks=max_ticks)
+        by_uid = {r.uid: r.result for r in self.finished}
+        return [by_uid[u] for u in uids]
+
+    # ---------------- internals ----------------
+    def _admit(self) -> None:
+        """FIFO admission into free slots (no overtaking: a wide request at
+        the head blocks narrower ones behind it, keeping service order)."""
+        now = time.time()
+        while self.queue and len(self._slot_free) >= self.queue[0].n_rows:
+            req = self.queue.popleft()
+            if self._slot_X is None:
+                self._slot_X = np.zeros((self.n_slots, req.X.shape[1]))
+            slots = np.asarray([self._slot_free.pop()
+                                for _ in range(req.n_rows)], dtype=np.int64)
+            req.slots = slots
+            req.admitted_at = now
+            self._slot_X[slots] = req.X
+            self.active[req.uid] = req
+
+    def _run_kind(self, kind: str, reqs: List[ProxRequest],
+                  X_tick: np.ndarray, pos: Dict[int, int]) -> None:
+        eng = self.engine
+        if kind == "predict":
+            scores = eng.predict(self.y, n_classes=self.n_classes, X=X_tick)
+        elif kind == "topk":
+            kk = max(r.k for r in reqs)
+            idx, val = eng.topk(k=kk, X=X_tick)
+            cols = getattr(eng, "prototype_indices_", None)
+            if cols is not None:
+                # map prototype columns -> training rows; zero-proximity
+                # slots are engine padding (fewer than k colliding columns),
+                # not neighbors — mark them -1 instead of fabricating the
+                # training row behind column 0
+                idx = np.where(val > 0, cols[idx], -1)
+        elif kind == "outlier":
+            from ..applications.outliers import oos_outlier_scores
+            scores = oos_outlier_scores(eng, self.y, X_tick)
+        elif kind == "propagate":
+            _, scores = self.propagator.partial_fit(X_tick)
+        else:                        # embed
+            scores = self.embedding.transform(X_tick)
+        for req in reqs:
+            take = np.asarray([pos[int(s)] for s in req.slots])
+            if kind == "predict":
+                s = scores[take]
+                req.result = {"scores": s, "labels": s.argmax(axis=1)}
+            elif kind == "topk":
+                req.result = {"indices": idx[take, :req.k],
+                              "values": val[take, :req.k]}
+            elif kind == "propagate":
+                s = scores[take]
+                req.result = {"scores": s, "labels": s.argmax(axis=1)}
+            elif kind == "outlier":
+                req.result = {"scores": scores[take]}
+            else:
+                req.result = {"embedding": scores[take]}
+
+    # ---------------- accounting ----------------
+    def stats(self) -> Dict[str, Any]:
+        """Latency/throughput stats per kind plus tick-level occupancy."""
+        out: Dict[str, Any] = {
+            "ticks": self.ticks,
+            "requests": len(self.finished),
+            "rows": self.rows_served,
+            "mean_occupancy": float(np.mean(self._occupancy))
+            if self._occupancy else 0.0,
+            "queue_depth": len(self.queue),
+        }
+        per: Dict[str, Dict[str, float]] = {}
+        for kind in KINDS:
+            lat = [r.latency_s for r in self.finished
+                   if r.kind == kind and r.latency_s is not None]
+            if not lat:
+                continue
+            wait = [r.wait_s for r in self.finished
+                    if r.kind == kind and r.wait_s is not None]
+            svc = [r.service_s for r in self.finished
+                   if r.kind == kind and r.service_s is not None]
+            per[kind] = {
+                "requests": len(lat),
+                "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "p95_ms": float(np.percentile(lat, 95) * 1e3),
+                "p50_service_ms": float(np.percentile(svc, 50) * 1e3)
+                if svc else 0.0,
+                "mean_wait_ms": float(np.mean(wait) * 1e3) if wait else 0.0,
+            }
+        out["kinds"] = per
+        return out

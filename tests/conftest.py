@@ -45,10 +45,14 @@ def app_kernel_cache():
     forest for the spectral/embedding tests, with its own oracle 'P_sym'.
     """
     from repro.core.api import ForestKernel
+    from repro.forest import _native
     X, y = gaussian_classes(180, d=8, n_classes=3, sep=3.0, seed=5)
+    backends = ["scipy", "jax", "pallas"]
+    if _native.available():
+        backends.append("native")
     out = {}
     shared = None
-    for be in ["scipy", "jax", "pallas"]:
+    for be in backends:
         fk = ForestKernel(kernel_method="gap", n_trees=12, seed=0,
                           engine_backend=be)
         if shared is None:

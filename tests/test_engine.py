@@ -8,15 +8,18 @@ import numpy as np
 import pytest
 
 from repro.core.engine import ENGINE_BACKENDS, ProximityEngine
+from repro.forest import _native
 
-BACKENDS = list(ENGINE_BACKENDS)
+BACKENDS = [be for be in ENGINE_BACKENDS
+            if be != "native" or _native.available()]
+NON_SCIPY = tuple(be for be in BACKENDS if be != "scipy")
 
 
 def _engines(rf_kernel_cache, method):
-    """Three engines sharing one fitted context — no refits."""
+    """One engine per backend sharing one fitted context — no refits."""
     fk = rf_kernel_cache[method]
     out = {"scipy": fk.engine}
-    for be in ("jax", "pallas"):
+    for be in NON_SCIPY:
         out[be] = ProximityEngine(fk.ctx, fk.assignment, forest=fk.forest,
                                   backend=be)
     return fk, out
@@ -28,7 +31,7 @@ def test_predict_identical_across_backends(rf_kernel_cache, method):
     y = fk.ctx.y
     C = fk.forest.n_classes_
     ref = engines["scipy"].predict(y, n_classes=C)
-    for be in ("jax", "pallas"):
+    for be in NON_SCIPY:
         got = engines[be].predict(y, n_classes=C)
         np.testing.assert_allclose(got, ref, atol=1e-8)
 
@@ -39,7 +42,7 @@ def test_oos_predict_identical_across_backends(rf_kernel_cache, method):
     X, y = rf_kernel_cache["_data"]
     Xq = X[:25] + 1e-3
     ref = engines["scipy"].predict(y, n_classes=fk.forest.n_classes_, X=Xq)
-    for be in ("jax", "pallas"):
+    for be in NON_SCIPY:
         got = engines[be].predict(y, n_classes=fk.forest.n_classes_, X=Xq)
         np.testing.assert_allclose(got, ref, atol=1e-8)
 
@@ -60,7 +63,7 @@ def test_kernel_block_identical_across_backends(rf_kernel_cache):
     fk, engines = _engines(rf_kernel_cache, "gap")
     rows, cols = np.arange(40), np.arange(10, 90)
     ref = engines["scipy"].kernel_block(rows, cols)
-    for be in ("jax", "pallas"):
+    for be in NON_SCIPY:
         np.testing.assert_allclose(engines[be].kernel_block(rows, cols),
                                    ref, atol=1e-8)
 
@@ -72,7 +75,7 @@ def test_matvec_matmat_identical_across_backends(rf_kernel_cache):
     V = rng.normal(size=(fk.ctx.n_train, 3))
     ref_v = engines["scipy"].matvec(v)
     ref_V = engines["scipy"].matmat(V)
-    for be in ("jax", "pallas"):
+    for be in NON_SCIPY:
         np.testing.assert_allclose(engines[be].matvec(v), ref_v, atol=1e-8)
         np.testing.assert_allclose(engines[be].matmat(V), ref_V, atol=1e-8)
     op = engines["jax"].operator()
@@ -204,6 +207,7 @@ def test_sharded_matmat_single_device_fallback(app_kernel_cache):
     assert eng.last_matmat_path == "segment"
 
 
+@pytest.mark.slow
 def test_engine_sharded_matmat_multi_device():
     """Forced 8-host-device subprocess: the train-state jax matmat routes
     through sharded_swlc_matmat and agrees with scipy; OOS batches fall back

@@ -53,6 +53,7 @@ def test_train_step_reduces_loss(arch, key):
 
 
 @pytest.mark.parametrize("arch", ALL_ARCHS)
+@pytest.mark.slow
 def test_decode_matches_forward(arch, key):
     """Greedy decode logits must match teacher-forced forward logits."""
     import dataclasses

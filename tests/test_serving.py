@@ -33,6 +33,7 @@ def _reference_greedy(cfg, params, prompt, n_new):
     return toks[len(prompt):]
 
 
+@pytest.mark.slow
 def test_engine_matches_reference(small_model):
     cfg, params = small_model
     rng = np.random.default_rng(0)
@@ -64,6 +65,7 @@ def test_engine_continuous_admission(small_model):
     assert s["mean_latency_s"] > 0
 
 
+@pytest.mark.slow
 def test_per_slot_position_decode(small_model):
     """Vector-pos decode at mixed offsets == scalar-pos decode per lane."""
     cfg, params = small_model

@@ -1,0 +1,227 @@
+"""ProximityServer serving-path invariants.
+
+Slot admission/retirement accounting, determinism of results under request
+reordering, prototype-compressed vs full-engine agreement, single-routing
+per tick, and a regression test for the PR-1 async buffer-aliasing race
+pattern (the serving loop owns a mutable slot buffer; engine calls must
+never alias it).
+"""
+import numpy as np
+import pytest
+
+from repro.applications.embed import ProximityEmbedding
+from repro.applications.prototypes import compress
+from repro.core.api import ForestKernel
+from repro.data.synthetic import gaussian_classes
+from repro.serve.proximity import KINDS, ProximityServer
+
+
+@pytest.fixture(scope="module")
+def serving_setup():
+    X, y = gaussian_classes(500, d=8, n_classes=3, sep=3.0, seed=5)
+    fk = ForestKernel(kernel_method="gap", n_trees=15, seed=0).fit(X, y)
+    rng = np.random.default_rng(0)
+    labeled = rng.random(len(y)) < 0.2
+    prop = fk.propagate_labels(labeled, online=True)
+    emb = ProximityEmbedding(n_components=2).fit(fk.engine)
+    Xq = np.ascontiguousarray(X[:60] + 1e-3)
+    return {"fk": fk, "X": X, "y": y, "Xq": Xq,
+            "propagator": prop, "embedding": emb}
+
+
+def _server(setup, n_slots=16, engine=None):
+    fk = setup["fk"]
+    return fk.serve(n_slots=n_slots, engine=engine,
+                    propagator=setup["propagator"],
+                    embedding=setup["embedding"])
+
+
+def _mixed_requests(Xq):
+    return [("predict", Xq[:5]), ("topk", Xq[5:13], 4),
+            ("outlier", Xq[13:20]), ("propagate", Xq[20:30]),
+            ("embed", Xq[30:40]), ("predict", Xq[40:43])]
+
+
+# ------------------------------------------------- admission/retirement ---
+def test_slot_admission_and_retirement_invariants(serving_setup):
+    srv = _server(serving_setup, n_slots=8)
+    Xq = serving_setup["Xq"]
+    uids = [srv.submit("predict", Xq[i * 5:(i + 1) * 5]) for i in range(5)]
+    assert len(srv.queue) == 5 and not srv.active
+    seen_rows = 0
+    while srv.queue or srv.active:
+        srv.step()
+        # every slot is exactly free or owned by one active request
+        owned = sorted(int(s) for r in srv.active.values() for s in r.slots)
+        assert sorted(srv._slot_free + owned) == list(range(8))
+        assert len(set(owned)) == len(owned), "slot double-booked"
+        seen_rows = srv.rows_served
+    assert seen_rows == 25
+    assert len(srv.finished) == 5 and not srv.queue and not srv.active
+    assert len(srv._slot_free) == 8
+    # FIFO service order: finish order follows submission order
+    assert [r.uid for r in srv.finished] == uids
+    for r in srv.finished:
+        assert r.done_at >= r.admitted_at >= r.submitted_at >= 0
+        assert r.result is not None
+    st = srv.stats()
+    assert st["requests"] == 5 and st["rows"] == 25
+    assert st["kinds"]["predict"]["requests"] == 5
+    assert st["kinds"]["predict"]["p95_ms"] >= st["kinds"]["predict"]["p50_ms"]
+
+
+def test_oversized_and_unknown_requests_rejected(serving_setup):
+    srv = _server(serving_setup, n_slots=4)
+    Xq = serving_setup["Xq"]
+    with pytest.raises(ValueError, match="exceed"):
+        srv.submit("predict", Xq[:5])
+    with pytest.raises(ValueError, match="unknown request kind"):
+        srv.submit("nonsense", Xq[:2])
+    srv_plain = ProximityServer(serving_setup["fk"].engine,
+                                y=serving_setup["y"], n_slots=4)
+    with pytest.raises(ValueError, match="propagate"):
+        srv_plain.submit("propagate", Xq[:2])
+    with pytest.raises(ValueError, match="embed"):
+        srv_plain.submit("embed", Xq[:2])
+    no_labels = ProximityServer(serving_setup["fk"].engine, n_slots=4)
+    with pytest.raises(ValueError, match="labels"):
+        no_labels.submit("predict", Xq[:2])
+
+
+def test_results_match_direct_engine_calls(serving_setup):
+    fk, y = serving_setup["fk"], serving_setup["y"]
+    Xq = serving_setup["Xq"]
+    srv = _server(serving_setup, n_slots=16)
+    res = srv.serve(_mixed_requests(Xq))
+    ref = fk.engine.predict(y, n_classes=3,
+                            X=np.ascontiguousarray(Xq[:5])).argmax(1)
+    np.testing.assert_array_equal(res[0]["labels"], ref)
+    idx, val = fk.engine.topk(k=4, X=np.ascontiguousarray(Xq[5:13]))
+    np.testing.assert_allclose(res[1]["values"], val, atol=1e-12)
+    Z = serving_setup["embedding"].transform(
+        np.ascontiguousarray(Xq[30:40]))
+    np.testing.assert_allclose(res[4]["embedding"], Z, atol=1e-8)
+
+
+# ------------------------------------------------------- determinism ------
+def test_determinism_under_request_reordering(serving_setup):
+    Xq = serving_setup["Xq"]
+    reqs = _mixed_requests(Xq)
+    perm = [3, 0, 5, 1, 4, 2]
+    res_a = _server(serving_setup, n_slots=16).serve(reqs)
+    res_b = _server(serving_setup, n_slots=16).serve([reqs[i] for i in perm])
+    for out_pos, in_pos in enumerate(perm):
+        a, b = res_a[in_pos], res_b[out_pos]
+        assert sorted(a) == sorted(b)
+        for key in a:
+            np.testing.assert_allclose(a[key], b[key], atol=1e-10,
+                                       err_msg=f"req {in_pos} field {key}")
+
+
+def test_determinism_across_slot_widths(serving_setup):
+    """The same request must produce the same result whether it shares its
+    tick with many neighbors (wide server) or runs alone (narrow server)."""
+    Xq = serving_setup["Xq"]
+    reqs = [("predict", Xq[:5]), ("outlier", Xq[5:10]), ("topk", Xq[10:15], 3)]
+    wide = _server(serving_setup, n_slots=32).serve(reqs)
+    narrow = _server(serving_setup, n_slots=5).serve(reqs)
+    for a, b in zip(wide, narrow):
+        for key in a:
+            np.testing.assert_allclose(a[key], b[key], atol=1e-10)
+
+
+# ------------------------------------------- one routed batch per tick ----
+def test_single_routing_pass_per_tick(serving_setup):
+    """A tick with all five kinds present routes the slot batch through the
+    forest exactly once; the per-kind engine calls reuse the cached state."""
+    fk = serving_setup["fk"]
+    # a batch content no other test routes, so the engine's OOS state cache
+    # cannot satisfy it without touching the forest
+    Xq = serving_setup["Xq"] + 3.3e-5
+    srv = _server(serving_setup, n_slots=64)
+    calls = []
+    orig_apply = fk.forest.apply
+
+    def counting_apply(X):
+        calls.append(np.asarray(X).shape)
+        return orig_apply(X)
+
+    fk.forest.apply = counting_apply
+    try:
+        srv.serve(_mixed_requests(Xq))   # fits in one tick (43 rows)
+    finally:
+        fk.forest.apply = orig_apply
+    assert srv.ticks == 1
+    assert len(calls) == 1, f"expected one routing pass, saw {calls}"
+
+
+# ------------------------------------------------- compressed serving -----
+def test_compressed_vs_full_agreement(serving_setup):
+    fk, y = serving_setup["fk"], serving_setup["y"]
+    Xq = serving_setup["Xq"]
+    ce = compress(fk.engine, y, n_prototypes=8, k=60)
+    assert ce.memory_bytes()["total"] < fk.engine.memory_bytes()["total"] / 4
+    full = _server(serving_setup, n_slots=32)
+    comp = fk.serve(n_slots=32, engine=ce)
+    rf = full.serve([("predict", Xq[:30])])[0]
+    rc = comp.serve([("predict", Xq[:30])])[0]
+    agree = (rf["labels"] == rc["labels"]).mean()
+    assert agree >= 0.9, f"compressed predict agreement {agree}"
+    # compressed topk indices are mapped back to training-row ids
+    rt = comp.serve([("topk", Xq[:10], 3)])[0]
+    real = rt["indices"] >= 0
+    assert real.any()
+    assert np.isin(rt["indices"][real], ce.prototype_indices_).all()
+    # padding slots (k wider than the colliding prototype columns) must be
+    # -1 sentinels, never a fabricated training-row id
+    wide = comp.serve([("topk", Xq[:10],
+                        len(ce.prototype_indices_) + 5)])[0]
+    pad = wide["values"] == 0
+    assert pad.any(), "expected padded top-k slots beyond the prototype set"
+    assert (wide["indices"][pad] == -1).all()
+    assert (wide["indices"][~pad] >= 0).all()
+
+
+# --------------------------------------------- buffer-aliasing regression -
+def test_engine_never_aliases_slot_buffer(serving_setup):
+    """PR-1 race pattern: the slot buffer is mutated on admission while
+    engine work from the previous tick may still be in flight (async
+    dispatch can hold zero-copy views).  Every engine call must therefore
+    receive a batch that does NOT share memory with the slot buffer."""
+    fk = serving_setup["fk"]
+    Xq = serving_setup["Xq"]
+    srv = _server(serving_setup, n_slots=8)
+    seen = []
+    orig_qs = fk.engine.query_state
+
+    def recording_qs(X=None):
+        if X is not None:
+            seen.append(X)
+        return orig_qs(X)
+
+    fk.engine.query_state = recording_qs
+    try:
+        srv.serve([("predict", Xq[:6]), ("topk", Xq[6:12], 3)])
+    finally:
+        fk.engine.query_state = orig_qs
+    assert seen, "no engine batches observed"
+    for X in seen:
+        assert not np.shares_memory(X, srv._slot_X), \
+            "engine batch aliases the mutable slot buffer"
+
+
+def test_results_survive_slot_buffer_mutation(serving_setup):
+    """Mutating the slot buffer right after a tick (what the next admission
+    does) must not corrupt already-computed results."""
+    fk, y = serving_setup["fk"], serving_setup["y"]
+    Xq = serving_setup["Xq"]
+    srv = _server(serving_setup, n_slots=8)
+    srv.submit("predict", Xq[:8])
+    srv.step()
+    res = srv.finished[0].result
+    labels_before = res["labels"].copy()
+    srv._slot_X[:] = 1e9                     # clobber, as admission would
+    np.testing.assert_array_equal(res["labels"], labels_before)
+    ref = fk.engine.predict(y, n_classes=3,
+                            X=np.ascontiguousarray(Xq[:8])).argmax(1)
+    np.testing.assert_array_equal(res["labels"], ref)

@@ -82,6 +82,7 @@ def test_checkpoint_prune_and_latest(tmp_path):
     assert dirs == ["step_00000020", "step_00000030"]
 
 
+@pytest.mark.slow
 def test_train_resume_exact(tmp_path):
     """Crash at step 6, resume from checkpoint@5 -> identical final loss to
     an uninterrupted run (deterministic skip-ahead data)."""

@@ -50,6 +50,7 @@ class ForestKernel:
     dtype: type = np.float64
     engine_backend: str = "scipy"    # 'scipy' | 'jax' | 'pallas' | 'native'
     routing_backend: str = "auto"    # 'auto'|'native'|'numpy'|'jax'|'pallas'
+    tree_backend: str = "auto"       # trainer: 'auto' | 'numpy' | 'native'
     n_jobs: int = 0                  # tree-fitting workers (0 = auto)
 
     forest: Optional[BaseForest] = None
@@ -67,7 +68,8 @@ class ForestKernel:
             min_samples_leaf=self.min_samples_leaf,
             max_features=self.max_features, n_bins=self.n_bins,
             task=self.task, seed=self.seed, n_jobs=self.n_jobs,
-            routing_backend=self.routing_backend)
+            routing_backend=self.routing_backend,
+            tree_backend=self.tree_backend)
         self.forest.fit(X, y)
         return self
 

@@ -17,7 +17,8 @@ import numpy as np
 from .bootstrap import bootstrap_counts, oob_mask
 from .trees import (Tree, TreeArrays, route_forest_batched, route_tree,
                     stack_leaf_values)
-from .training import Binner, TreeParams, fit_tree_binned
+from .training import (Binner, TreeParams, fit_forest_binned,
+                       fit_tree_binned, resolve_tree_backend)
 
 __all__ = ["RandomForest", "ExtraTrees", "GradientBoostedTrees", "BaseForest"]
 
@@ -59,6 +60,8 @@ class BaseForest:
     splitter: str = "best"
     n_jobs: int = 0                  # 0 -> auto (min(8, cpus)), 1 -> serial
     routing_backend: str = "auto"    # 'auto'|'native'|'numpy'|'jax'|'pallas'
+    tree_backend: str = "auto"       # trainer: 'auto'|'numpy'|'native'
+    tree_block: int = 0              # native batch width (0 auto, <0 all)
 
     # fitted state
     trees_: Optional[List[Tree]] = None
@@ -78,7 +81,7 @@ class BaseForest:
             min_samples_leaf=self.min_samples_leaf,
             min_samples_split=self.min_samples_split,
             max_features=self.max_features, n_bins=self.n_bins,
-            splitter=self.splitter)
+            splitter=self.splitter, tree_backend=self.tree_backend)
 
     def fit(self, X: np.ndarray, y: np.ndarray) -> "BaseForest":
         rng = np.random.default_rng(self.seed)
@@ -98,18 +101,30 @@ class BaseForest:
         # deterministic under any worker-pool schedule.
         child_rngs = rng.spawn(self.n_trees)
 
-        def fit_one(t: int) -> Tree:
-            w = self.inbag_[t]
-            sel = np.nonzero(w)[0]
-            return fit_tree_binned(Xb[sel], y[sel], w[sel].astype(np.float64),
-                                   params, child_rngs[t], self.binner_)
-
-        jobs = _resolve_jobs(self.n_jobs, self.n_trees)
-        if jobs == 1:
-            self.trees_ = [fit_one(t) for t in range(self.n_trees)]
+        backend = resolve_tree_backend(self.tree_backend, self.binner_.n_bins)
+        if backend == "native":
+            # Batched level-synchronous growth: one native call per level
+            # spans every tree's frontier, so OpenMP threads stay saturated
+            # at deep narrow levels and `n_jobs` Python workers never stack
+            # on top of OMP threads (no n_jobs × OMP oversubscription).
+            self.trees_ = fit_forest_binned(Xb, y, self.inbag_, params,
+                                            child_rngs, self.binner_,
+                                            backend="native",
+                                            tree_block=self.tree_block)
         else:
-            with ThreadPoolExecutor(max_workers=jobs) as ex:
-                self.trees_ = list(ex.map(fit_one, range(self.n_trees)))
+            def fit_one(t: int) -> Tree:
+                w = self.inbag_[t]
+                sel = np.nonzero(w)[0]
+                return fit_tree_binned(Xb[sel], y[sel],
+                                       w[sel].astype(np.float64),
+                                       params, child_rngs[t], self.binner_)
+
+            jobs = _resolve_jobs(self.n_jobs, self.n_trees)
+            if jobs == 1:
+                self.trees_ = [fit_one(t) for t in range(self.n_trees)]
+            else:
+                with ThreadPoolExecutor(max_workers=jobs) as ex:
+                    self.trees_ = list(ex.map(fit_one, range(self.n_trees)))
         self.tree_weights_ = np.ones(self.n_trees, dtype=np.float64)
         self._cache_tables()
         return self

@@ -1,13 +1,37 @@
-"""Level-wise histogram CART training (numpy fast path).
+"""Level-wise histogram CART training (numpy + native C backends).
 
 This is the CPU trainer used for the paper-scale experiments (hundreds of
 thousands of samples).  It follows the LightGBM/sklearn-HistGradientBoosting
 design: features are pre-binned to ``n_bins`` quantile bins, and at each tree
 level the class/moment histograms of *all* active nodes are accumulated in one
-vectorized ``np.bincount`` over a flattened (node, feature, bin[, class])
-index.  Total histogram work per level is ``O(N_inbag * d)`` independent of
-the node count, so growing to purity costs ``O(N d depth)`` per tree — the
-``O(N T h̄)`` training term of the paper's §3.3.
+vectorized pass over a flattened (node, feature, bin[, class]) index.  Total
+histogram work per level is ``O(N_inbag * d)`` independent of the node count,
+so growing to purity costs ``O(N d depth)`` per tree — the ``O(N T h̄)``
+training term of the paper's §3.3.
+
+The three per-level hot loops — histogram accumulation, best-split scoring,
+and sample partition — run through one of two backends selected by
+``TreeParams.tree_backend``:
+
+  ``numpy``   tiled ``np.bincount`` histograms (int32 flat indices when they
+              fit, feature-tiled so no ``(m, d)`` weight blow-up is ever
+              materialized) + vectorized cumsum scoring,
+  ``native``  C kernels (``train_hist`` / ``train_best_split`` /
+              ``train_partition`` in ``forest/_native.py``; OpenMP, float64
+              accumulators, uint8 bin codes),
+  ``auto``    native when a host compiler is available and codes fit uint8.
+
+Both backends grow **bit-identical trees**: every RNG draw happens here in
+Python (per tree, chunk-aligned), the C kernels accumulate each histogram
+bin in the same sample order numpy's ``bincount`` does (each (node,
+feature-stripe) is owned by one thread), and split scores are evaluated with
+the same float64 operation order on both paths, with first-maximum
+tie-breaking on equal gains.  Because of that, a whole forest can be grown
+as *one* level-synchronous batch (`fit_forest_binned`): each level makes a
+single native call spanning every tree's frontier, so OpenMP threads stay
+saturated even at deep, narrow levels — this replaces thread-pool-per-tree
+parallelism on the native path (and composes with OMP_NUM_THREADS without
+``n_jobs × OMP`` oversubscription).
 
 The TPU-native counterpart (one-hot × matmul histograms) lives in
 ``repro/kernels/histogram``; this module is the reference/production CPU path.
@@ -15,15 +39,18 @@ The TPU-native counterpart (one-hot × matmul histograms) lives in
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .trees import Tree
 
-__all__ = ["TreeParams", "Binner", "fit_tree", "fit_tree_binned"]
+__all__ = ["TreeParams", "Binner", "fit_tree", "fit_tree_binned",
+           "fit_forest_binned", "resolve_tree_backend"]
 
 _HIST_BUDGET = 1 << 26  # max float64 elements per histogram chunk (~512MB)
+_TILE_ELEMS = 1 << 20   # max elements per transient index tile (numpy hist)
+_BATCH_BUDGET = 1 << 28  # resident frontier bytes per multi-tree batch
 
 
 @dataclasses.dataclass
@@ -36,6 +63,7 @@ class TreeParams:
     max_features: Optional[str] = "sqrt"   # "sqrt" | "log2" | None (all) | int
     n_bins: int = 64
     splitter: str = "best"            # "best" (CART) | "random" (ExtraTrees)
+    tree_backend: str = "auto"        # "auto" | "numpy" | "native"
 
     def n_feature_subset(self, d: int) -> int:
         mf = self.max_features
@@ -48,34 +76,114 @@ class TreeParams:
         return max(1, min(int(mf), d))
 
 
-class Binner:
-    """Quantile pre-binning of a feature matrix to small integer codes."""
+def resolve_tree_backend(backend: Optional[str], n_bins: int) -> str:
+    """Resolve 'auto'|'numpy'|'native' to a concrete trainer backend.
 
-    def __init__(self, X: np.ndarray, n_bins: int = 64, rng: Optional[np.random.Generator] = None):
+    The native kernels store bin codes as uint8, so they require
+    ``n_bins <= 256``; 'auto' silently falls back to numpy outside that
+    envelope (or when no host C compiler exists), 'native' raises.
+    """
+    if backend in (None, "auto"):
+        from . import _native
+        return "native" if (_native.available() and n_bins <= 256) else "numpy"
+    if backend == "native":
+        from . import _native
+        if not _native.available():
+            raise RuntimeError("native tree backend unavailable "
+                               "(no working C compiler)")
+        if n_bins > 256:
+            raise ValueError("native tree backend requires n_bins <= 256 "
+                             "(uint8 bin codes)")
+        return "native"
+    if backend == "numpy":
+        return "numpy"
+    raise ValueError(f"unknown tree backend {backend!r}; have "
+                     "'auto' | 'numpy' | 'native'")
+
+
+class Binner:
+    """Quantile pre-binning of a feature matrix to small integer codes.
+
+    Vectorized over features: all quantile edges come from a single
+    ``np.quantile(sub, qs, axis=0)`` call, stored offset-concatenated
+    (``edges_flat`` / ``edge_offset`` / ``edge_count``), and ``transform``
+    bins every feature in one broadcast pass per sample chunk.  Codes are
+    ``uint8`` whenever ``n_bins <= 256`` (halving trainer bandwidth),
+    ``int16`` otherwise.
+    """
+
+    def __init__(self, X: np.ndarray, n_bins: int = 64,
+                 rng: Optional[np.random.Generator] = None):
         n, d = X.shape
         rng = rng or np.random.default_rng(0)
         sub = X if n <= 200_000 else X[rng.choice(n, 200_000, replace=False)]
         qs = np.linspace(0, 1, n_bins + 1)[1:-1]
-        self.edges: List[np.ndarray] = []
-        for f in range(d):
-            e = np.unique(np.quantile(sub[:, f], qs))
-            # Drop the global max as an edge (it would create an empty bin).
-            mx = sub[:, f].max()
-            e = e[e < mx]
-            self.edges.append(e.astype(np.float64))
-        self.n_bins = max(2, max(len(e) for e in self.edges) + 1)
+        Q = np.quantile(sub, qs, axis=0)           # (n_q, d), monotone per col
+        # Dedupe per column and drop the global max as an edge (it would
+        # create an empty bin) — the vectorized form of per-feature
+        # ``np.unique(...)[ ... < max]``.
+        keep = np.ones(Q.shape, dtype=bool)
+        if len(Q) > 1:
+            keep[1:] = Q[1:] != Q[:-1]
+        keep &= Q < sub.max(axis=0)[None, :]
+        cnt = keep.sum(axis=0).astype(np.int64)
+        self.edge_count = cnt
+        self.edge_offset = np.concatenate(
+            [[0], np.cumsum(cnt)]).astype(np.int64)
+        self.edges_flat = np.ascontiguousarray(Q.T[keep.T], dtype=np.float64)
+        self.n_bins = int(max(2, cnt.max(initial=0) + 1))
+        # Padded (d, E) edge matrix for the one-pass transform; NaN pads
+        # never count in >= comparisons.
+        E = max(int(cnt.max(initial=0)), 1)
+        pad = np.full((d, E), np.nan)
+        if len(self.edges_flat):
+            rr = np.repeat(np.arange(d), cnt)
+            cc = np.arange(len(self.edges_flat)) - np.repeat(
+                self.edge_offset[:-1], cnt)
+            pad[rr, cc] = self.edges_flat
+        self._pad_edges = pad
+
+    @property
+    def edges(self) -> List[np.ndarray]:
+        """Per-feature edge arrays (views into ``edges_flat``)."""
+        return [self.edges_flat[self.edge_offset[f]:self.edge_offset[f + 1]]
+                for f in range(len(self.edge_count))]
 
     def transform(self, X: np.ndarray) -> np.ndarray:
-        """Map raw features to bin codes; bin(x) <= b  <=>  x <= edges[b]."""
+        """Map raw features to bin codes; bin(x) <= b  <=>  x <= edges[b].
+
+        One broadcast comparison pass per sample chunk (no per-feature
+        Python loop); exact ``searchsorted(edges_f, x, side='left')``
+        semantics including NaN (which bins past the last edge).
+        """
         n, d = X.shape
-        out = np.empty((n, d), dtype=np.int16)
-        for f in range(d):
-            out[:, f] = np.searchsorted(self.edges[f], X[:, f], side="left")
+        dt = np.uint8 if self.n_bins <= 256 else np.int16
+        out = np.empty((n, d), dtype=dt)
+        pe = self._pad_edges
+        cnt = self.edge_count[None, :]
+        chunk = max(1, int(_TILE_ELEMS * 4) // max(pe.shape[1] * d, 1))
+        for i0 in range(0, n, chunk):
+            x = X[i0:i0 + chunk]
+            ge = pe[None, :, :] >= x[:, :, None]     # (c, d, E)
+            out[i0:i0 + chunk] = (cnt - ge.sum(axis=2)).astype(dt)
         return out
 
     def threshold(self, f: int, b: int) -> float:
-        e = self.edges[f]
-        return float(e[min(b, len(e) - 1)]) if len(e) else np.inf
+        c = int(self.edge_count[f])
+        if not c:
+            return np.inf
+        return float(self.edges_flat[self.edge_offset[f] + min(b, c - 1)])
+
+    def thresholds(self, f: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """Vectorized ``threshold`` over (feature, bin) arrays."""
+        f = np.asarray(f, dtype=np.int64)
+        b = np.asarray(b, dtype=np.int64)
+        if not len(self.edges_flat):
+            return np.full(f.shape, np.inf)
+        c = self.edge_count[f]
+        idx = self.edge_offset[f] + np.minimum(b, np.maximum(c - 1, 0))
+        out = self.edges_flat[np.minimum(idx, len(self.edges_flat) - 1)]
+        return np.where(c > 0, out, np.inf)
 
 
 def _node_values(y: np.ndarray, w: np.ndarray, params: TreeParams) -> np.ndarray:
@@ -92,219 +200,498 @@ def fit_tree(X: np.ndarray, y: np.ndarray, w: np.ndarray, params: TreeParams,
     return fit_tree_binned(Xb, y, w, params, rng, binner)
 
 
-def fit_tree_binned(Xb: np.ndarray, y: np.ndarray, w: np.ndarray, params: TreeParams,
-                    rng: np.random.Generator, binner: Binner) -> Tree:
+def fit_tree_binned(Xb: np.ndarray, y: np.ndarray, w: np.ndarray,
+                    params: TreeParams, rng: np.random.Generator,
+                    binner: Binner) -> Tree:
     """Grow one tree level-wise on pre-binned features.
 
     ``w`` are per-sample weights (bootstrap multiplicities); samples with
     ``w == 0`` must be excluded by the caller (they are OOB).
     """
-    n, d = Xb.shape
-    n_bins = binner.n_bins
-    cls = params.task == "classification"
-    C = params.n_classes if cls else 3  # regression channels: (w, wy, wy^2)
-
-    # Growing node store (parallel lists; converted to arrays at the end).
-    feat_l: List[int] = [-2]          # -2 = unresolved, -1 = leaf
-    thr_l: List[float] = [np.inf]
-    left_l: List[int] = [0]
-    right_l: List[int] = [0]
-    val_l: List[np.ndarray] = [_node_values(y, w, params)]
-    cnt_l: List[float] = [float(w.sum())]
-    depth_l: List[int] = [0]
-
-    sample_node = np.zeros(n, dtype=np.int64)
-    active = [0]                       # node ids to try splitting this level
-    yc = y.astype(np.int64) if cls else y.astype(np.float64)
-    wf = w.astype(np.float64)
-    depth = 0
-
-    while active and depth < params.max_depth:
-        depth += 1
-        act = np.asarray(active, dtype=np.int64)
-        n_act = len(act)
-        # `act` is ascending by construction (children appended in id order).
-        pos = np.searchsorted(act, sample_node)
-        pos_c = np.minimum(pos, n_act - 1)
-        in_act = act[pos_c] == sample_node
-        idx_samples = np.nonzero(in_act)[0]
-        local = pos_c[idx_samples]
-
-        # ---- histogram accumulation, chunked over active nodes ----
-        per_node_elems = d * n_bins * C
-        chunk_nodes = max(1, int(_HIST_BUDGET // max(per_node_elems, 1)))
-        best_gain = np.full(n_act, -np.inf)
-        best_f = np.zeros(n_act, dtype=np.int64)
-        best_b = np.zeros(n_act, dtype=np.int64)
-        node_tot = np.zeros((n_act, C))
-
-        order = np.argsort(local, kind="stable")
-        idx_sorted = idx_samples[order]
-        local_sorted = local[order]
-        bounds = np.searchsorted(local_sorted, np.arange(n_act + 1))
-
-        for c0 in range(0, n_act, chunk_nodes):
-            c1 = min(c0 + chunk_nodes, n_act)
-            s0, s1 = bounds[c0], bounds[c1]
-            if s1 == s0:
-                continue
-            rows = idx_sorted[s0:s1]
-            loc = local_sorted[s0:s1] - c0
-            nb = Xb[rows].astype(np.int64)                     # (m, d)
-            base = (loc[:, None] * d + np.arange(d)[None, :]) * n_bins + nb  # (m, d)
-            m = len(rows)
-            size = (c1 - c0) * d * n_bins
-            if cls:
-                flat = base * C + yc[rows][:, None]
-                hist = np.bincount(flat.ravel(), weights=np.repeat(wf[rows], d),
-                                   minlength=size * C).reshape(c1 - c0, d, n_bins, C)
-            else:
-                fr = base.ravel()
-                ww = np.repeat(wf[rows], d)
-                wy = np.repeat(wf[rows] * yc[rows], d)
-                wy2 = np.repeat(wf[rows] * yc[rows] ** 2, d)
-                hist = np.stack([
-                    np.bincount(fr, weights=ww, minlength=size).reshape(c1 - c0, d, n_bins),
-                    np.bincount(fr, weights=wy, minlength=size).reshape(c1 - c0, d, n_bins),
-                    np.bincount(fr, weights=wy2, minlength=size).reshape(c1 - c0, d, n_bins),
-                ], axis=-1)
-
-            g, f_idx, b_idx, tot = _best_splits(hist, params, rng, d, n_bins, cls)
-            best_gain[c0:c1] = g
-            best_f[c0:c1] = f_idx
-            best_b[c0:c1] = b_idx
-            node_tot[c0:c1] = tot
-
-        # ---- apply splits / finalize leaves ----
-        next_active: List[int] = []
-        split_mask = np.zeros(n_act, dtype=bool)
-        child_of = np.zeros((n_act, 2), dtype=np.int64)
-        for i, a in enumerate(act):
-            nw = node_tot[i, 0] if not cls else node_tot[i].sum()
-            pure = (cls and (node_tot[i].max() >= nw - 1e-9)) or \
-                   (not cls and node_tot[i, 2] - node_tot[i, 1] ** 2 / max(nw, 1e-12) <= 1e-12)
-            if (best_gain[i] <= 1e-12 or nw < params.min_samples_split
-                    or pure or depth >= params.max_depth):
-                feat_l[a] = -1
-                continue
-            f, b = int(best_f[i]), int(best_b[i])
-            feat_l[a] = f
-            thr_l[a] = binner.threshold(f, b)
-            lid, rid = len(feat_l), len(feat_l) + 1
-            left_l[a], right_l[a] = lid, rid
-            for _ in range(2):
-                feat_l.append(-2)
-                thr_l.append(np.inf)
-                left_l.append(0)
-                right_l.append(0)
-                val_l.append(None)  # filled below
-                cnt_l.append(0.0)
-                depth_l.append(depth)
-            split_mask[i] = True
-            child_of[i] = (lid, rid)
-            next_active += [lid, rid]
-
-        if split_mask.any():
-            smask = split_mask[local]
-            rows = idx_samples[smask]
-            li = local[smask]
-            f_s = best_f[li]
-            go_left = Xb[rows, f_s] <= best_b[li]
-            sample_node[rows] = np.where(go_left, child_of[li, 0], child_of[li, 1])
-            # child payloads, vectorized: pair index per split node, side bit.
-            split_ids = np.nonzero(split_mask)[0]
-            pair_rank = np.full(n_act, -1, dtype=np.int64)
-            pair_rank[split_ids] = np.arange(len(split_ids))
-            child_slot = 2 * pair_rank[li] + (~go_left).astype(np.int64)
-            n_child = 2 * len(split_ids)
-            if cls:
-                cvals = np.bincount(child_slot * C + yc[rows], weights=wf[rows],
-                                    minlength=n_child * C).reshape(n_child, C)
-            else:
-                cw = np.bincount(child_slot, weights=wf[rows], minlength=n_child)
-                cwy = np.bincount(child_slot, weights=wf[rows] * yc[rows], minlength=n_child)
-                cvals = np.stack([cw, cwy / np.maximum(cw, 1e-12)], axis=1)
-            ccnt = cvals.sum(1) if cls else cvals[:, 0]
-            for p, i in enumerate(split_ids):
-                for side in (0, 1):
-                    cid = int(child_of[i, side])
-                    val_l[cid] = cvals[2 * p + side].astype(np.float32)
-                    cnt_l[cid] = float(ccnt[2 * p + side])
-        active = next_active
-
-    # Any still-unresolved nodes (depth cap) become leaves.
-    feature = np.asarray([(-1 if f == -2 else f) for f in feat_l], dtype=np.int32)
-    leaf_id = np.full(len(feature), -1, dtype=np.int32)
-    leaf_id[feature == -1] = np.arange(int((feature == -1).sum()), dtype=np.int32)
-    return Tree(
-        feature=feature,
-        threshold=np.asarray(thr_l, dtype=np.float32),
-        left=np.asarray(left_l, dtype=np.int32),
-        right=np.asarray(right_l, dtype=np.int32),
-        leaf_id=leaf_id,
-        value=np.stack([v if v is not None
-                        else np.zeros(params.n_classes if cls else 2, np.float32)
-                        for v in val_l]),
-        n_node_samples=np.asarray(np.round(cnt_l), dtype=np.int32),
-        depth=max(depth_l) + 1 if depth_l else 1,
-    )
+    backend = resolve_tree_backend(params.tree_backend, binner.n_bins)
+    rows = np.arange(Xb.shape[0], dtype=np.int64)
+    task = (rows, np.asarray(w, dtype=np.float64), rng)
+    return _grow_trees(np.asarray(Xb), np.asarray(y), [task], params, binner,
+                       backend)[0]
 
 
-def _best_splits(hist: np.ndarray, params: TreeParams, rng: np.random.Generator,
-                 d: int, n_bins: int, cls: bool):
+def fit_forest_binned(Xb: np.ndarray, y: np.ndarray, inbag: np.ndarray,
+                      params: TreeParams, rngs: Sequence[np.random.Generator],
+                      binner: Binner, backend: Optional[str] = None,
+                      tree_block: int = 0) -> List[Tree]:
+    """Grow a whole forest as level-synchronous batches of trees.
+
+    Each level issues ONE histogram/score/partition pass spanning every
+    tree's frontier, so the native kernels see a wide node set even when
+    individual trees are deep and narrow.  ``tree_block`` caps how many
+    trees share a batch: 0 (default) auto-sizes the cap so resident
+    frontier state (instance rows/weights/labels + the partition double
+    buffer, ~48 bytes per in-bag instance) stays under ``_BATCH_BUDGET``;
+    negative means all trees in one batch.  Trees are bit-identical to
+    growing each alone with its own spawned RNG stream (any backend, any
+    block size).
+    """
+    backend = resolve_tree_backend(
+        backend if backend is not None else params.tree_backend, binner.n_bins)
+    T = inbag.shape[0]
+    if tree_block == 0:
+        m_avg = max(1.0, float((inbag > 0).sum()) / max(T, 1))
+        block = int(max(1, min(T, _BATCH_BUDGET // int(48 * m_avg))))
+    elif tree_block < 0:
+        block = T
+    else:
+        block = max(1, int(tree_block))
+    Xb = np.asarray(Xb)
+    trees: List[Tree] = []
+    for b0 in range(0, T, block):
+        tasks = []
+        for t in range(b0, min(b0 + block, T)):
+            rows = np.nonzero(inbag[t])[0].astype(np.int64)
+            tasks.append((rows, inbag[t, rows].astype(np.float64), rngs[t]))
+        trees += _grow_trees(Xb, y, tasks, params, binner, backend)
+    return trees
+
+
+# --------------------------------------------------------------------------
+# shared level-wise driver
+# --------------------------------------------------------------------------
+
+class _TreeStore:
+    """Growable struct-of-arrays node store for one tree."""
+
+    __slots__ = ("feat", "thr", "left", "right", "val", "cnt", "n",
+                 "last_level")
+
+    def __init__(self, value_dim: int):
+        cap = 64
+        self.feat = np.full(cap, -2, np.int64)   # -2 unresolved, -1 leaf
+        self.thr = np.full(cap, np.inf, np.float64)
+        self.left = np.zeros(cap, np.int64)
+        self.right = np.zeros(cap, np.int64)
+        self.val = np.zeros((cap, value_dim), np.float32)
+        self.cnt = np.zeros(cap, np.float64)
+        self.n = 0
+        self.last_level = 0
+
+    def alloc(self, m: int) -> int:
+        need = self.n + m
+        cap = len(self.feat)
+        if need > cap:
+            new = max(need, 2 * cap)
+
+            def grow(a, fill):
+                b = np.empty((new,) + a.shape[1:], a.dtype)
+                b[:cap] = a
+                b[cap:] = fill
+                return b
+
+            self.feat = grow(self.feat, -2)
+            self.thr = grow(self.thr, np.inf)
+            self.left = grow(self.left, 0)
+            self.right = grow(self.right, 0)
+            self.val = grow(self.val, 0)
+            self.cnt = grow(self.cnt, 0.0)
+        base = self.n
+        self.n = need
+        return base
+
+    def to_tree(self) -> Tree:
+        n = self.n
+        return Tree.from_growth(
+            self.feat[:n], self.thr[:n], self.left[:n], self.right[:n],
+            self.val[:n], self.cnt[:n],
+            depth=self.last_level + 1 if self.last_level else 1)
+
+
+class _LevelDraws:
+    """Per-level RNG draws for one tree, generated chunk-by-chunk in the
+    tree's own chunk order — the conformance-critical stream order: per
+    chunk, splitter-u first, then the feature-subset mask — but *served*
+    lazily for ascending node-range slices.  Only the window between the
+    last consumed node and the highest requested one is ever resident, so
+    splitter-u memory stays bounded by the hist-chunk width instead of the
+    whole level."""
+
+    __slots__ = ("rng", "n_act", "d", "B", "chunk", "random_split", "k",
+                 "_gen", "_off", "_parts_u", "_parts_m")
+
+    def __init__(self, rng: np.random.Generator, n_act: int, d: int, B: int,
+                 chunk_nodes: int, random_split: bool, k: int):
+        self.rng, self.n_act, self.d, self.B = rng, n_act, d, B
+        self.chunk, self.random_split, self.k = chunk_nodes, random_split, k
+        self._gen = 0        # nodes drawn so far
+        self._off = 0        # node index of the first retained part row
+        self._parts_u: List[np.ndarray] = []
+        self._parts_m: List[np.ndarray] = []
+
+    def take(self, lo: int, hi: int
+             ) -> Tuple[List[np.ndarray], List[np.ndarray]]:
+        """Draw slices covering node range [lo, hi); ranges must be
+        requested in ascending order (fully-consumed parts are freed)."""
+        while self._gen < hi:
+            c = min(self.chunk, self.n_act - self._gen)
+            if self.random_split:
+                self._parts_u.append(self.rng.random((c, self.d, self.B)))
+            if self.k < self.d:
+                cols = self.rng.random((c, self.d)).argsort(axis=1)[:, :self.k]
+                mk = np.zeros((c, self.d), dtype=bool)
+                np.put_along_axis(mk, cols, True, axis=1)
+                self._parts_m.append(mk)
+            self._gen += c
+        u_out: List[np.ndarray] = []
+        m_out: List[np.ndarray] = []
+        for parts, out in ((self._parts_u, u_out), (self._parts_m, m_out)):
+            pos = self._off
+            for p in parts:
+                if pos + len(p) > lo and pos < hi:
+                    out.append(p[max(lo - pos, 0):hi - pos])
+                pos += len(p)
+        src = self._parts_u if self._parts_u else self._parts_m
+        ndrop = 0
+        for p in src:
+            if self._off + len(p) > hi:
+                break
+            self._off += len(p)
+            ndrop += 1
+        del self._parts_u[:ndrop]
+        del self._parts_m[:ndrop]
+        return u_out, m_out
+
+
+def _hist_numpy(Xb: np.ndarray, rows: np.ndarray, w: np.ndarray,
+                y_inst: np.ndarray, bounds: np.ndarray, d: int, B: int,
+                C: int, cls: bool) -> np.ndarray:
+    """(gc, d, B, C) float64 histograms via tiled flat bincounts.
+
+    Feature-tiled so the transient index/weight arrays stay under
+    ``_TILE_ELEMS`` elements (no ``np.repeat(w, d)`` blow-up), with int32
+    flat indices whenever ``gc * d * B * C < 2**31``.  Per-bin accumulation
+    order is sample order — identical to the untiled bincount and to the
+    native kernel.
+    """
+    gc = len(bounds) - 1
+    hist = np.zeros((gc, d, B, C), dtype=np.float64)
+    m = len(rows)
+    if m == 0 or gc == 0:
+        return hist
+    size = gc * d * B
+    idx_dt = np.int32 if size * C < 2 ** 31 else np.int64
+    loc = np.repeat(np.arange(gc, dtype=idx_dt), np.diff(bounds))
+    codes = Xb[rows]                                  # (m, d) small dtype
+    td_max = max(1, min(d, int(_TILE_ELEMS // max(m, 1))))
+    if cls:
+        yl = y_inst.astype(idx_dt)
+    else:
+        wy = w * y_inst
+        wy2 = w * (y_inst * y_inst)
+    for f0 in range(0, d, td_max):
+        f1 = min(f0 + td_max, d)
+        td = f1 - f0
+        base = (loc[:, None] * np.int64(td).astype(idx_dt)
+                + np.arange(td, dtype=idx_dt)[None, :]) * B \
+            + codes[:, f0:f1].astype(idx_dt)
+        tsize = gc * td * B
+        if cls:
+            flat = base * C + yl[:, None]
+            hist[:, f0:f1] = np.bincount(
+                flat.ravel(), weights=np.repeat(w, td),
+                minlength=tsize * C).reshape(gc, td, B, C)
+        else:
+            fr = base.ravel()
+            hist[:, f0:f1] = np.stack([
+                np.bincount(fr, weights=np.repeat(w, td),
+                            minlength=tsize).reshape(gc, td, B),
+                np.bincount(fr, weights=np.repeat(wy, td),
+                            minlength=tsize).reshape(gc, td, B),
+                np.bincount(fr, weights=np.repeat(wy2, td),
+                            minlength=tsize).reshape(gc, td, B),
+            ], axis=-1)
+    return hist
+
+
+def _seq_sum_last(a: np.ndarray) -> np.ndarray:
+    """Sum over the last axis in strictly sequential channel order (the
+    exact operation order of the native kernel)."""
+    s = a[..., 0].copy()
+    for c in range(1, a.shape[-1]):
+        s += a[..., c]
+    return s
+
+
+def _seq_sq_last(a: np.ndarray) -> np.ndarray:
+    s = a[..., 0] * a[..., 0]
+    for c in range(1, a.shape[-1]):
+        s += a[..., c] * a[..., c]
+    return s
+
+
+def _best_splits(hist: np.ndarray, msl: float, cls: bool, random_split: bool,
+                 u: Optional[np.ndarray], mask: Optional[np.ndarray]):
     """Pick the best (feature, bin) split per node from histograms.
 
     hist: (nodes, d, bins, C).  Returns (gain, feature, bin, node_totals).
+    Float64 throughout; ties broken to the first (lowest-index) maximum —
+    both properties shared with the native ``train_best_split`` kernel.
     """
-    nodes = hist.shape[0]
-    # Early (wide) levels hold large counts -> float64 for split-score
-    # precision; deep levels hold tiny per-node counts -> float32 is exact
-    # enough and halves the bandwidth of the dominant reduction.
-    acc_dt = np.float64 if hist.size < (1 << 21) else np.float32
-    cum = np.cumsum(hist.astype(acc_dt), axis=2)       # left stats at split bin b
+    cum = np.cumsum(hist, axis=2)                      # left stats at bin b
     tot = cum[:, :, -1:, :]                            # (nodes, d, 1, C)
     R = tot - cum
     if cls:
-        nL = cum.sum(-1)
-        nR = R.sum(-1)
-        score = np.einsum("ndbc,ndbc->ndb", cum, cum) / np.maximum(nL, 1e-12)
-        score += np.einsum("ndbc,ndbc->ndb", R, R) / np.maximum(nR, 1e-12)
+        nL = _seq_sum_last(cum)
+        nR = _seq_sum_last(R)
+        score = _seq_sq_last(cum) / np.maximum(nL, 1e-12)
+        score += _seq_sq_last(R) / np.maximum(nR, 1e-12)
         p0 = tot[:, 0, 0, :]
-        parent = (p0 ** 2).sum(-1) / np.maximum(p0.sum(-1), 1e-12)
+        parent = _seq_sq_last(p0) / np.maximum(_seq_sum_last(p0), 1e-12)
         gain = score - parent[:, None, None]
-        node_tot = p0.astype(np.float64)
+        node_tot = np.ascontiguousarray(p0)
     else:
         nL, nR = cum[..., 0], R[..., 0]
         score = cum[..., 1] ** 2 / np.maximum(nL, 1e-12)
         score += R[..., 1] ** 2 / np.maximum(nR, 1e-12)
         parent = tot[..., 0, 1] ** 2 / np.maximum(tot[..., 0, 0], 1e-12)
         gain = score - parent[:, :, None]
-        node_tot = tot[:, 0, 0, :].astype(np.float64)
+        node_tot = np.ascontiguousarray(tot[:, 0, 0, :])
 
-    valid = (nL >= params.min_samples_leaf) & (nR >= params.min_samples_leaf)
+    valid = (nL >= msl) & (nR >= msl)
     valid[:, :, -1] = False                       # last bin -> empty right side
     gain = np.where(valid, gain, -np.inf)
 
-    if params.splitter == "random":
+    if random_split:
         # ExtraTrees: one random valid bin per (node, feature).
-        u = rng.random((nodes, d, n_bins))
-        u = np.where(valid, u, -np.inf)
-        rb = u.argmax(axis=2)
+        uu = np.where(valid, u, -np.inf)
+        rb = uu.argmax(axis=2)
         gain = np.take_along_axis(gain, rb[:, :, None], axis=2)[:, :, 0]
         bins_choice = rb
     else:
         bins_choice = gain.argmax(axis=2)
         gain = np.take_along_axis(gain, bins_choice[:, :, None], axis=2)[:, :, 0]
 
-    # Per-node random feature subset (RF semantics).
-    k = params.n_feature_subset(d)
-    if k < d:
-        mask = np.zeros((nodes, d), dtype=bool)
-        cols = rng.random((nodes, d)).argsort(axis=1)[:, :k]
-        np.put_along_axis(mask, cols, True, axis=1)
+    if mask is not None:                          # per-node feature subset
         gain = np.where(mask, gain, -np.inf)
 
     f_best = gain.argmax(axis=1)
     g_best = np.take_along_axis(gain, f_best[:, None], axis=1)[:, 0]
     b_best = np.take_along_axis(bins_choice, f_best[:, None], axis=1)[:, 0]
     return g_best, f_best, b_best, node_tot
+
+
+def _partition_numpy(Xb: np.ndarray, rows: np.ndarray, w: np.ndarray,
+                     y_inst: np.ndarray, bounds: np.ndarray,
+                     split: np.ndarray, best_f: np.ndarray,
+                     best_b: np.ndarray, cls: bool, Cv: int):
+    """Partition split nodes' samples into child order.
+
+    Returns (rows_next, w_next, child_counts, csum): instances of split
+    nodes reordered as [left block, right block] per node (stable within a
+    side), per-child instance counts, and per-child payload sums
+    (class-weight rows for classification, (Σw, Σwy) for regression).
+    """
+    gc = len(bounds) - 1
+    counts = np.diff(bounds)
+    loc = np.repeat(np.arange(gc, dtype=np.int64), counts)
+    keep = split[loc]
+    rowsk, wk, yk, lock = rows[keep], w[keep], y_inst[keep], loc[keep]
+    go_left = Xb[rowsk, best_f[lock]] <= best_b[lock]
+    srank = np.cumsum(split) - 1                      # split rank per node
+    child_slot = 2 * srank[lock] + (~go_left).astype(np.int64)
+    n_child = 2 * int(split.sum())
+    order = np.argsort(child_slot, kind="stable")
+    rows_next = rowsk[order]
+    w_next = wk[order]
+    child_counts = np.bincount(child_slot, minlength=n_child).astype(np.int64)
+    if cls:
+        csum = np.bincount(child_slot * Cv + yk, weights=wk,
+                           minlength=n_child * Cv).reshape(n_child, Cv)
+    else:
+        cw = np.bincount(child_slot, weights=wk, minlength=n_child)
+        cwy = np.bincount(child_slot, weights=wk * yk, minlength=n_child)
+        csum = np.stack([cw, cwy], axis=1)
+    return rows_next, w_next, child_counts, csum
+
+
+def _grow_trees(Xb: np.ndarray, y: np.ndarray, tasks: Sequence[tuple],
+                params: TreeParams, binner: Binner, backend: str) -> List[Tree]:
+    """Grow a batch of trees level-synchronously (the shared driver).
+
+    ``tasks`` is a sequence of ``(rows, w, rng)`` — global sample indices
+    into ``Xb``, per-instance weights, and the tree's RNG stream.  All RNG
+    consumption happens here (never in the kernels), per tree in the same
+    chunked order regardless of backend or batch width, which is what makes
+    numpy/native and batched/per-tree growth bit-identical.
+    """
+    n_all, d = Xb.shape
+    B = int(binner.n_bins)
+    cls = params.task == "classification"
+    C = params.n_classes if cls else 3      # histogram channels
+    Cv = params.n_classes if cls else 2     # stored value dim
+    k = params.n_feature_subset(d)
+    random_split = params.splitter == "random"
+    msl = float(params.min_samples_leaf)
+    chunk_nodes = max(1, int(_HIST_BUDGET // max(d * B * C, 1)))
+
+    native = backend == "native"
+    if native:
+        from . import _native as nat
+        Xb_k = np.ascontiguousarray(Xb, dtype=np.uint8)
+        if d and len(Xb_k) and int(Xb_k.max()) >= B:
+            raise ValueError(f"bin codes exceed binner.n_bins={B}")
+    else:
+        nat = None
+        Xb_k = Xb
+    yc = y.astype(np.int64) if cls else np.asarray(y, dtype=np.float64)
+
+    stores: List[_TreeStore] = []
+    acts: List[np.ndarray] = []      # per-tree active node ids (store ids)
+    rngs = []
+    for rows, w, rng in tasks:
+        st = _TreeStore(Cv)
+        st.alloc(1)
+        st.val[0] = _node_values(y[rows], w, params)
+        st.cnt[0] = float(w.sum())
+        stores.append(st)
+        acts.append(np.zeros(1, np.int64))
+        rngs.append(rng)
+
+    # Level-global frontier state: instances of all live trees' active
+    # nodes, sorted by (tree, node); the partition step emits the next
+    # level's layout directly, so nothing is re-concatenated per level.
+    live = list(range(len(tasks)))
+    rows_g = np.ascontiguousarray(
+        np.concatenate([t[0] for t in tasks]), dtype=np.int64)
+    w_g = np.ascontiguousarray(
+        np.concatenate([t[1] for t in tasks]), dtype=np.float64)
+    bounds_g = np.concatenate(
+        [[0], np.cumsum([len(t[0]) for t in tasks])]).astype(np.int64)
+    depth = 0
+    while live and depth < params.max_depth:
+        depth += 1
+        g_sizes = np.array([len(acts[t]) for t in live], np.int64)
+        node_off = np.concatenate([[0], np.cumsum(g_sizes)]).astype(np.int64)
+        G = int(node_off[-1])
+        y_g = yc[rows_g]
+
+        best_gain = np.empty(G)
+        best_f = np.empty(G, np.int64)
+        best_b = np.empty(G, np.int64)
+        node_tot = np.empty((G, C))
+
+        # Per-tree RNG draws, generated lazily per hist chunk (in each
+        # tree's own chunk order) and freed as the chunk sweep passes them.
+        draw_cache: dict = {}
+        tree_for_node = np.repeat(np.arange(len(live)), g_sizes)
+
+        def draws_for(i: int) -> _LevelDraws:
+            if i not in draw_cache:
+                draw_cache[i] = _LevelDraws(
+                    rngs[live[i]], int(g_sizes[i]), d, B, chunk_nodes,
+                    random_split, k)
+            return draw_cache[i]
+
+        for c0 in range(0, G, chunk_nodes):
+            c1 = min(c0 + chunk_nodes, G)
+            s0, s1 = int(bounds_g[c0]), int(bounds_g[c1])
+            bch = bounds_g[c0:c1 + 1] - s0
+            u_ch = m_ch = None
+            if random_split or k < d:
+                u_parts, m_parts = [], []
+                for i in range(int(tree_for_node[c0]),
+                               int(tree_for_node[c1 - 1]) + 1):
+                    lo = max(c0, int(node_off[i])) - int(node_off[i])
+                    hi = min(c1, int(node_off[i + 1])) - int(node_off[i])
+                    us, ms = draws_for(i).take(lo, hi)
+                    u_parts += us
+                    m_parts += ms
+                if random_split:
+                    u_ch = np.ascontiguousarray(
+                        u_parts[0] if len(u_parts) == 1
+                        else np.concatenate(u_parts))
+                if k < d:
+                    m_ch = np.ascontiguousarray(
+                        m_parts[0] if len(m_parts) == 1
+                        else np.concatenate(m_parts))
+                for i in list(draw_cache):
+                    if int(node_off[i + 1]) <= c1:
+                        del draw_cache[i]
+            if native:
+                res = nat.train_level_native(
+                    Xb_k, rows_g[s0:s1], w_g[s0:s1], y_g[s0:s1], bch, B, C,
+                    cls, msl, u_ch, m_ch)
+            else:
+                hist = _hist_numpy(Xb_k, rows_g[s0:s1], w_g[s0:s1],
+                                   y_g[s0:s1], bch, d, B, C, cls)
+                res = _best_splits(hist, msl, cls, random_split, u_ch, m_ch)
+            (best_gain[c0:c1], best_f[c0:c1], best_b[c0:c1],
+             node_tot[c0:c1]) = res
+
+        # ---- split / leaf decisions, vectorized over every tree's nodes ----
+        nw = node_tot.sum(1) if cls else node_tot[:, 0]
+        if cls:
+            pure = node_tot.max(1) >= nw - 1e-9
+        else:
+            pure = node_tot[:, 2] - node_tot[:, 1] ** 2 \
+                / np.maximum(nw, 1e-12) <= 1e-12
+        split_g = ~((best_gain <= 1e-12) | (nw < params.min_samples_split)
+                    | pure | (depth >= params.max_depth))
+
+        n_split_g = int(split_g.sum())
+        if n_split_g:
+            if native:
+                keep_counts = np.where(split_g, np.diff(bounds_g), 0)
+                cpos = (np.cumsum(keep_counts) - keep_counts).astype(np.int64)
+                rows_nx, w_nx, child_counts, csum = \
+                    nat.train_partition_native(
+                        Xb_k, rows_g, w_g, y_g, bounds_g, split_g, best_f,
+                        best_b, cpos, int(keep_counts.sum()), cls, Cv)
+            else:
+                rows_nx, w_nx, child_counts, csum = _partition_numpy(
+                    Xb_k, rows_g, w_g, y_g, bounds_g, split_g, best_f,
+                    best_b, cls, Cv)
+            if cls:
+                cvals = csum
+            else:
+                cvals = np.stack(
+                    [csum[:, 0],
+                     csum[:, 1] / np.maximum(csum[:, 0], 1e-12)], axis=1)
+            ccnt = cvals.sum(1) if cls else cvals[:, 0]
+            sr = np.concatenate([[0], np.cumsum(split_g)]).astype(np.int64)
+
+        new_live = []
+        for i, t in enumerate(live):
+            o0, o1 = int(node_off[i]), int(node_off[i + 1])
+            st = stores[t]
+            sp = split_g[o0:o1]
+            ns = int(sp.sum())
+            if not ns:
+                # every active node became a leaf; unresolved feat (-2)
+                # entries are converted at assembly
+                acts[t] = np.empty(0, np.int64)
+                continue
+            a_s = acts[t][sp]
+            f_s = best_f[o0:o1][sp]
+            b_s = best_b[o0:o1][sp]
+            base = st.alloc(2 * ns)
+            st.feat[a_s] = f_s
+            st.thr[a_s] = binner.thresholds(f_s, b_s)
+            cid = base + np.arange(2 * ns, dtype=np.int64)
+            st.left[a_s] = cid[0::2]
+            st.right[a_s] = cid[1::2]
+            st.last_level = depth
+            s_lo, s_hi = int(sr[o0]), int(sr[o1])
+            st.val[base:base + 2 * ns] = \
+                cvals[2 * s_lo:2 * s_hi].astype(np.float32)
+            st.cnt[base:base + 2 * ns] = ccnt[2 * s_lo:2 * s_hi]
+            acts[t] = cid
+            new_live.append(t)
+        live = new_live
+        if n_split_g:
+            # partition output IS the next level's global frontier layout
+            rows_g, w_g = rows_nx, w_nx
+            bounds_g = np.concatenate(
+                [[0], np.cumsum(child_counts)]).astype(np.int64)
+        else:
+            rows_g = np.empty(0, np.int64)
+            w_g = np.empty(0, np.float64)
+            bounds_g = np.zeros(1, np.int64)
+
+    return [st.to_tree() for st in stores]

@@ -42,6 +42,30 @@ class Tree:
     n_node_samples: np.ndarray  # (n_nodes,) int32
     depth: int = 0
 
+    @classmethod
+    def from_growth(cls, feature: np.ndarray, threshold: np.ndarray,
+                    left: np.ndarray, right: np.ndarray, value: np.ndarray,
+                    counts: np.ndarray, depth: int) -> "Tree":
+        """Finalize a grown node store into a Tree.
+
+        Unresolved nodes (``feature == -2``, i.e. depth-capped frontiers)
+        become leaves, and ``leaf_id`` numbers all leaves in node order.
+        """
+        feature = np.where(feature == -2, -1, feature).astype(np.int32)
+        leaf = feature == -1
+        leaf_id = np.full(len(feature), -1, dtype=np.int32)
+        leaf_id[leaf] = np.arange(int(leaf.sum()), dtype=np.int32)
+        return cls(
+            feature=feature,
+            threshold=np.asarray(threshold, dtype=np.float32),
+            left=np.asarray(left, dtype=np.int32),
+            right=np.asarray(right, dtype=np.int32),
+            leaf_id=leaf_id,
+            value=np.asarray(value, dtype=np.float32),
+            n_node_samples=np.asarray(np.round(counts), dtype=np.int32),
+            depth=depth,
+        )
+
     @property
     def n_nodes(self) -> int:
         return int(self.feature.shape[0])

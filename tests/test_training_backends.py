@@ -1,0 +1,330 @@
+"""Trainer-backend conformance: numpy and native grow bit-identical trees.
+
+The contract under test (see forest/training.py): all RNG draws happen in
+the Python driver (per tree, chunk-aligned), the native kernels accumulate
+every histogram bin in the same sample order as numpy's bincount, and split
+scores are evaluated with the same float64 operation order with
+first-maximum tie-breaking — so ``tree_backend="native"`` (including the
+batched multi-tree scheduler) must reproduce ``tree_backend="numpy"``
+exactly, field for field.
+"""
+import numpy as np
+import pytest
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+from repro.data.synthetic import friedman1, gaussian_classes
+from repro.forest import _native
+from repro.forest.bootstrap import bootstrap_counts
+from repro.forest.ensemble import (ExtraTrees, GradientBoostedTrees,
+                                   RandomForest)
+from repro.forest.training import (Binner, TreeParams, fit_forest_binned,
+                                   fit_tree_binned, resolve_tree_backend)
+
+pytestmark = pytest.mark.skipif(not _native.available(),
+                                reason="no host C compiler")
+
+TREE_FIELDS = ["feature", "threshold", "left", "right", "leaf_id", "value",
+               "n_node_samples"]
+
+
+def assert_trees_identical(a, b, ctx=""):
+    assert len(a) == len(b), ctx
+    for i, (t1, t2) in enumerate(zip(a, b)):
+        for f in TREE_FIELDS:
+            x1, x2 = getattr(t1, f), getattr(t2, f)
+            assert x1.dtype == x2.dtype, f"{ctx} tree {i} field {f} dtype"
+            assert np.array_equal(x1, x2), f"{ctx} tree {i} field {f}"
+        assert t1.depth == t2.depth, f"{ctx} tree {i} depth"
+
+
+def _fit_pair(cls_, **kw):
+    """Fit the same forest with both backends; everything else identical."""
+    X, y = kw.pop("data")
+    f_np = cls_(tree_backend="numpy", **kw).fit(X, y)
+    f_nat = cls_(tree_backend="native", **kw).fit(X, y)
+    return f_np, f_nat
+
+
+# ---------------------------------------------------------------- matrix
+@pytest.mark.parametrize("model,task,splitter", [
+    (RandomForest, "classification", "best"),
+    (ExtraTrees, "classification", "random"),
+    (RandomForest, "regression", "best"),
+    (ExtraTrees, "regression", "random"),
+])
+def test_backend_conformance_matrix(model, task, splitter):
+    if task == "classification":
+        X, y = gaussian_classes(900, d=10, n_classes=3, seed=3)
+    else:
+        X, y = friedman1(900, seed=3)
+    f_np, f_nat = _fit_pair(model, data=(X, y), n_trees=6, seed=0, task=task)
+    assert f_np.splitter == splitter  # model default under test
+    assert_trees_identical(f_np.trees_, f_nat.trees_,
+                           f"{model.__name__}/{task}")
+
+
+def test_weighted_bootstrap_conformance():
+    """Explicit multiplicity weights through fit_tree_binned directly."""
+    X, y = gaussian_classes(600, d=8, n_classes=4, seed=1)
+    binner = Binner(X, 64, np.random.default_rng(0))
+    Xb = binner.transform(X)
+    inbag = bootstrap_counts(len(X), 4, np.random.default_rng(5))
+    for t in range(4):
+        w = inbag[t]
+        sel = np.nonzero(w)[0]
+        trees = {}
+        for be in ["numpy", "native"]:
+            p = TreeParams(task="classification", n_classes=4,
+                           tree_backend=be)
+            trees[be] = fit_tree_binned(Xb[sel], y[sel],
+                                        w[sel].astype(np.float64), p,
+                                        np.random.default_rng(42 + t), binner)
+        assert_trees_identical([trees["numpy"]], [trees["native"]],
+                               f"bootstrap tree {t}")
+
+
+def test_gbt_conformance():
+    """GBT fits stages sequentially through the single-tree driver."""
+    X, y = gaussian_classes(700, d=8, n_classes=2, seed=4)
+    g_np, g_nat = _fit_pair(GradientBoostedTrees, data=(X, y), n_trees=8,
+                            seed=0, task="classification")
+    assert_trees_identical(g_np.trees_, g_nat.trees_, "gbt")
+    np.testing.assert_array_equal(g_np.tree_weights_, g_nat.tree_weights_)
+
+
+def test_batched_equals_per_tree():
+    """One batched multi-tree native call == per-tree growth (any block)."""
+    X, y = gaussian_classes(800, d=9, n_classes=3, seed=6)
+    rng = np.random.default_rng(0)
+    binner = Binner(X, 64, rng)
+    Xb = binner.transform(X)
+    inbag = bootstrap_counts(len(X), 6, rng)
+    params = TreeParams(task="classification", n_classes=3)
+
+    def grow(backend, block):
+        rngs = np.random.default_rng(7).spawn(6)
+        return fit_forest_binned(Xb, y, inbag, params, rngs, binner,
+                                 backend=backend, tree_block=block)
+
+    ref = grow("numpy", 1)
+    for backend, block in [("numpy", 0), ("native", 1), ("native", 2),
+                           ("native", 0), ("native", -1)]:
+        assert_trees_identical(ref, grow(backend, block),
+                               f"{backend}/block={block}")
+    # and through the BaseForest knob
+    a = RandomForest(n_trees=6, seed=11, tree_backend="native",
+                     tree_block=1).fit(X, y)
+    b = RandomForest(n_trees=6, seed=11, tree_backend="native",
+                     tree_block=0).fit(X, y)
+    assert_trees_identical(a.trees_, b.trees_, "BaseForest.tree_block")
+
+
+# ---------------------------------------------------------------- edges
+def test_constant_features_conformance():
+    """Constant (and near-constant) features can never split."""
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(400, 6))
+    X[:, 0] = 3.25
+    X[:, 1] = np.round(X[:, 1] * 0.25)        # few distinct values
+    y = (X[:, 2] > 0).astype(np.int64)
+    f_np, f_nat = _fit_pair(RandomForest, data=(X, y), n_trees=5, seed=0)
+    assert_trees_identical(f_np.trees_, f_nat.trees_, "constant features")
+    assert all((t.feature != 0).all() for t in f_np.trees_)
+
+
+def test_pure_node_and_single_sample_leaves():
+    """Pure-at-root trees and min_samples_leaf=1 growth to purity."""
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(300, 5))
+    y = np.zeros(300, dtype=np.int64)          # pure root -> stump
+    f_np, f_nat = _fit_pair(RandomForest, data=(X, y), n_trees=3, seed=0)
+    assert_trees_identical(f_np.trees_, f_nat.trees_, "pure root")
+    assert all(t.n_nodes == 1 for t in f_nat.trees_)
+
+    X, y = gaussian_classes(500, d=6, n_classes=5, seed=8)
+    f_np, f_nat = _fit_pair(RandomForest, data=(X, y), n_trees=4, seed=0,
+                            min_samples_leaf=1)
+    assert_trees_identical(f_np.trees_, f_nat.trees_, "grown to purity")
+    assert any(t.leaf_counts().min() == 1 for t in f_nat.trees_)
+
+
+def test_depth_cap_conformance():
+    X, y = gaussian_classes(800, d=10, n_classes=4, seed=2)
+    for md in [1, 2, 4]:
+        f_np, f_nat = _fit_pair(RandomForest, data=(X, y), n_trees=4, seed=0,
+                                max_depth=md)
+        assert_trees_identical(f_np.trees_, f_nat.trees_, f"max_depth={md}")
+        assert all(t.depth <= md + 1 for t in f_nat.trees_)
+
+
+def test_min_samples_constraints_conformance():
+    X, y = gaussian_classes(800, d=10, n_classes=3, seed=9)
+    f_np, f_nat = _fit_pair(RandomForest, data=(X, y), n_trees=4, seed=0,
+                            min_samples_leaf=25, min_samples_split=60)
+    assert_trees_identical(f_np.trees_, f_nat.trees_, "min_samples")
+    assert all(t.leaf_counts().min() >= 25 for t in f_nat.trees_)
+
+
+def test_all_features_no_subset_conformance():
+    """max_features=None skips the per-node feature mask entirely."""
+    X, y = gaussian_classes(500, d=5, n_classes=3, seed=10)
+    f_np, f_nat = _fit_pair(RandomForest, data=(X, y), n_trees=3, seed=0,
+                            max_features=None)
+    assert_trees_identical(f_np.trees_, f_nat.trees_, "max_features=None")
+
+
+# ---------------------------------------------------------------- property
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=200),
+       n=st.integers(min_value=20, max_value=160),
+       d=st.integers(min_value=1, max_value=6),
+       n_bins=st.integers(min_value=2, max_value=32))
+def test_hyp_conformance_classification(seed, n, d, n_bins):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d))
+    if d > 1:
+        X[:, 0] = rng.integers(0, 3, size=n)   # ties / few distinct codes
+    y = rng.integers(0, 3, size=n)
+    for model in (RandomForest, ExtraTrees):
+        f_np, f_nat = _fit_pair(model, data=(X, y), n_trees=3,
+                                seed=seed % 7, n_bins=n_bins)
+        assert_trees_identical(f_np.trees_, f_nat.trees_,
+                               f"hyp cls {model.__name__} seed={seed}")
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=200),
+       n=st.integers(min_value=20, max_value=160),
+       d=st.integers(min_value=1, max_value=6))
+def test_hyp_conformance_regression(seed, n, d):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d))
+    y = rng.normal(size=n) + X[:, 0]
+    for model in (RandomForest, ExtraTrees):
+        f_np, f_nat = _fit_pair(model, data=(X, y), n_trees=3,
+                                seed=seed % 5, task="regression")
+        assert_trees_identical(f_np.trees_, f_nat.trees_,
+                               f"hyp reg {model.__name__} seed={seed}")
+
+
+def test_tiny_chunk_draw_windows(monkeypatch):
+    """Pathological chunking: chunk_nodes=3 forces many per-tree RNG chunks
+    and global hist chunks that cross tree boundaries mid-level, exercising
+    the lazy _LevelDraws window logic on both backends."""
+    import repro.forest.training as tr
+    X, y = gaussian_classes(900, d=7, n_classes=3, seed=2)
+    monkeypatch.setattr(tr, "_HIST_BUDGET", 7 * 64 * 3 * 3)  # chunk_nodes=3
+    f_np, f_nat = _fit_pair(ExtraTrees, data=(X, y), n_trees=5, seed=3)
+    assert_trees_identical(f_np.trees_, f_nat.trees_, "tiny chunks")
+
+
+# ---------------------------------------------------------------- binner
+def test_binner_matches_per_feature_reference():
+    """Vectorized fit/transform == the per-feature quantile/searchsorted
+    loop it replaced, including ties, constant columns and NaN queries."""
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(2000, 9))
+    X[:, 0] = np.round(X[:, 0])               # ties -> duplicate quantiles
+    X[:, 1] = -2.5                            # constant column (no edges)
+    b = Binner(X, 32, np.random.default_rng(42))
+    qs = np.linspace(0, 1, 33)[1:-1]
+    ref_edges = []
+    for f in range(9):
+        e = np.unique(np.quantile(X[:, f], qs))
+        ref_edges.append(e[e < X[:, f].max()].astype(np.float64))
+    assert b.n_bins == max(2, max(len(e) for e in ref_edges) + 1)
+    for f in range(9):
+        np.testing.assert_array_equal(b.edges[f], ref_edges[f])
+    Xq = rng.normal(size=(300, 9))
+    Xq[0, 2] = np.nan
+    Xq[1, 2] = np.inf
+    Xq[2, 2] = -np.inf
+    got = b.transform(Xq)
+    assert got.dtype == np.uint8              # n_bins <= 256
+    for f in range(9):
+        np.testing.assert_array_equal(
+            got[:, f].astype(np.int64),
+            np.searchsorted(ref_edges[f], Xq[:, f], side="left"))
+    # vectorized thresholds == scalar threshold
+    fs = rng.integers(0, 9, 40)
+    bs = rng.integers(0, b.n_bins, 40)
+    tv = b.thresholds(fs, bs)
+    for i in range(40):
+        assert tv[i] == b.threshold(int(fs[i]), int(bs[i]))
+
+
+def test_binner_int16_above_256_bins():
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(3000, 3))
+    b = Binner(X, 400, np.random.default_rng(0))
+    assert b.n_bins > 256
+    assert b.transform(X).dtype == np.int16
+    # and the native backend refuses (uint8 codes only)
+    with pytest.raises(ValueError):
+        resolve_tree_backend("native", b.n_bins)
+
+
+def test_numpy_trainer_peak_memory_wide_d():
+    """The tiled histogram path must stay under the old trainer's root-level
+    transient blow-up: 4 full (m, d) index/weight arrays (int64 codes +
+    flat indices + np.repeat'ed weights) = 4*m*d*8 bytes."""
+    import tracemalloc
+    rng = np.random.default_rng(0)
+    n, d = 20_000, 64
+    X = rng.normal(size=(n, d))
+    y = rng.integers(0, 3, size=n)
+    binner = Binner(X, 64, np.random.default_rng(1))
+    Xb = binner.transform(X)
+    params = TreeParams(task="classification", n_classes=3, max_depth=6,
+                        tree_backend="numpy")
+    tracemalloc.start()
+    fit_tree_binned(Xb, y, np.ones(n), params, np.random.default_rng(2),
+                    binner)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    old_root_transients = 4 * n * d * 8          # ~41 MB on this fixture
+    assert peak < old_root_transients, \
+        f"peak {peak/1e6:.1f} MB >= old transient floor " \
+        f"{old_root_transients/1e6:.1f} MB"
+
+
+# ---------------------------------------------------------------- plumbing
+def test_backend_resolution_and_gating():
+    assert resolve_tree_backend("auto", 64) == "native"
+    assert resolve_tree_backend("auto", 1000) == "numpy"   # uint8 envelope
+    assert resolve_tree_backend("numpy", 64) == "numpy"
+    with pytest.raises(ValueError):
+        resolve_tree_backend("native", 1000)
+    with pytest.raises(ValueError):
+        resolve_tree_backend("bogus", 64)
+
+
+def test_native_fit_skips_thread_pool(monkeypatch):
+    """No n_jobs x OMP oversubscription: the native path must grow the
+    forest in the batched driver (single Python caller over OpenMP), never
+    inside a ThreadPoolExecutor, whatever n_jobs says."""
+    import repro.forest.ensemble as ens
+    calls = {"pool": 0}
+
+    class BoomPool:
+        def __init__(self, *a, **k):
+            calls["pool"] += 1
+            raise AssertionError("native fit must not spawn a thread pool")
+
+    monkeypatch.setattr(ens, "ThreadPoolExecutor", BoomPool)
+    X, y = gaussian_classes(300, d=6, n_classes=3, seed=0)
+    rf = ens.RandomForest(n_trees=4, seed=0, n_jobs=4,
+                          tree_backend="native").fit(X, y)
+    assert len(rf.trees_) == 4 and calls["pool"] == 0
+
+
+def test_forest_kernel_threads_tree_backend():
+    from repro.core.api import ForestKernel
+    X, y = gaussian_classes(400, d=6, n_classes=3, seed=0)
+    fks = [ForestKernel(n_trees=5, seed=0, tree_backend=be).fit(X, y)
+           for be in ("numpy", "native")]
+    assert_trees_identical(fks[0].forest.trees_, fks[1].forest.trees_,
+                           "ForestKernel")
+    # downstream proximity ops see identical forests -> identical kernels
+    P0, P1 = (fk.kernel().toarray() for fk in fks)
+    np.testing.assert_array_equal(P0, P1)

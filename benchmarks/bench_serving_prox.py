@@ -72,9 +72,130 @@ def _drive(server: ProximityServer, reqs, yte_for=None) -> dict:
     return out
 
 
+def _sustained(fk, ce, Xte, ytr, *, slo_ms: float = 500.0, rows: int = 8,
+               n_batches: int = 64, sync_requests: int = 10,
+               ratio_target: float = 50.0, offered_factor: float = 1.25,
+               max_requests: int = 1500, duration_s: float = 10.0,
+               escalate_margin: float = 0.2, n_slots: int = 128,
+               prefix_depth: int = 6, deadline_s: float = 4.0,
+               assert_slo: bool = False, seed: int = 1) -> dict:
+    """Sustained-throughput SLO mode: Poisson arrivals against the async
+    tiered server (shallow → compressed → full) vs a synchronous full-engine
+    baseline that serves one request at a time.
+
+    Reports requests/s at the p95 latency SLO, deadline sheds at nominal
+    load, and predict agreement vs the full engine (the escalation oracle).
+    """
+    rng = np.random.default_rng(seed)
+    C = fk.forest.n_classes_
+    pool = [np.ascontiguousarray(Xte[rng.integers(0, len(Xte), size=rows)])
+            for _ in range(n_batches)]
+    oracle = [fk.engine.predict(ytr, n_classes=C, X=b).argmax(1)
+              for b in pool]
+    kinds = ["predict", "predict", "topk", "outlier"]  # same mix as _drive
+
+    def _req(i):
+        kind = kinds[i % len(kinds)]
+        bi = i % n_batches
+        return (kind, pool[bi], 10) if kind == "topk" else (kind, pool[bi])
+
+    # --- synchronous full-engine baseline: one request at a time ---------
+    sync_srv = ProximityServer(fk.engine, y=ytr, n_slots=rows)
+    sync_srv.serve([_req(i) for i in range(len(kinds))])  # warm every kind
+    sync_srv.finished.clear()
+    t0 = time.perf_counter()
+    for i in range(sync_requests):
+        sync_srv.serve([_req(i)])
+    sync_wall = time.perf_counter() - t0
+    sync_lat = [r.latency_s for r in sync_srv.finished]
+    sync_rps = sync_requests / sync_wall
+    out = {"slo_ms": slo_ms, "rows_per_request": rows,
+           "sync_full": {
+               "requests": sync_requests,
+               "requests_per_s": round(sync_rps, 2),
+               "p95_ms": round(float(np.percentile(sync_lat, 95) * 1e3), 2)}}
+
+    # --- tiered async server under Poisson arrivals ----------------------
+    offered_rps = ratio_target * sync_rps * offered_factor
+    n_req = max(50, min(max_requests, int(offered_rps * duration_s)))
+    srv = fk.serve_tiered(prefix_depth=prefix_depth, compressed_engine=ce,
+                          n_slots=n_slots, escalate_margin=escalate_margin)
+    srv.serve([_req(i) for i in range(len(kinds))])   # warm all tiers
+    gaps = rng.exponential(1.0 / offered_rps, size=n_req)
+    uid_batch = {}
+    srv.start()
+    try:
+        t0 = time.perf_counter()
+        next_at = t0
+        for i in range(n_req):
+            next_at += gaps[i]
+            pause = next_at - time.perf_counter()
+            if pause > 0:
+                time.sleep(pause)
+            kind, *rest = _req(i)
+            uid = srv.submit(kind, rest[0], k=10, deadline_s=deadline_s)
+            uid_batch[uid] = (kind, i % n_batches)
+        srv.wait(list(uid_batch), timeout=120.0)
+        wall = time.perf_counter() - t0
+    finally:
+        srv.stop()
+
+    done = [r for r in srv.finished if r.uid in uid_batch]
+    lat = [r.latency_s for r in done if r.latency_s is not None
+           and not r.shed]
+    preds = [r for r in done if uid_batch[r.uid][0] == "predict"
+             and r.result is not None]
+    agree = [float((r.result["labels"]
+                    == oracle[uid_batch[r.uid][1]]).mean()) for r in preds]
+    esc_agree = [float((r.result["labels"]
+                        == oracle[uid_batch[r.uid][1]]).mean())
+                 for r in preds if r.final_tier == "full"
+                 and r.tier_path != ["full"]]
+    st = srv.stats()
+    p95 = float(np.percentile(lat, 95) * 1e3) if lat else float("inf")
+    achieved = len(done) / wall
+    out["tiered_async"] = {
+        "requests": n_req,
+        "offered_rps": round(offered_rps, 1),
+        "achieved_rps": round(achieved, 1),
+        "p50_ms": round(float(np.percentile(lat, 50) * 1e3), 2) if lat
+        else None,
+        "p95_ms": round(p95, 2),
+        "shed": st["shed"], "timeouts": st["timeouts"],
+        "escalations": st["escalations"],
+        "escalation_rate": round(st["escalation_rate"], 4),
+        "tier_requests": {name: t["routed_requests"]
+                          for name, t in st["tiers"].items()},
+    }
+    out["speedup_vs_sync_full"] = round(achieved / sync_rps, 1)
+    out["p95_slo_met"] = bool(p95 <= slo_ms)
+    out["predict_agreement"] = round(float(np.mean(agree)), 4) if agree \
+        else None
+    out["escalated_oracle_agreement"] = round(float(np.mean(esc_agree)), 4) \
+        if esc_agree else None
+    print(f" sustained: sync full {sync_rps:.2f} req/s | tiered async "
+          f"{achieved:.1f} req/s ({out['speedup_vs_sync_full']}x) "
+          f"p95 {p95:.1f}ms (SLO {slo_ms}ms: "
+          f"{'met' if out['p95_slo_met'] else 'MISSED'}) "
+          f"shed={st['shed']} esc={st['escalations']} "
+          f"agreement={out['predict_agreement']}", flush=True)
+    if assert_slo:
+        assert out["p95_slo_met"], \
+            f"p95 {p95:.1f}ms exceeds the {slo_ms}ms SLO"
+        assert st["shed"] == 0, f"{st['shed']} deadline sheds at nominal load"
+        assert esc_agree and min(esc_agree) == 1.0, \
+            "need >=1 escalated request whose labels match the full oracle"
+    return out
+
+
 def run(n: int = 50_000, d: int = 20, trees: int = 50, backend: str = "auto",
         n_prototypes: int = 20, proto_k: int = 100, n_slots: int = 64,
         n_requests: int = 120, rows_per_request: int = 16,
+        sustained: bool = True, slo_ms: float = 500.0,
+        escalate_margin: float = 0.2, sustained_rows: int = 8,
+        sustained_slots: int = 128, sustained_prefix_depth: int = 6,
+        sustained_duration_s: float = 10.0, ratio_target: float = 50.0,
+        assert_slo: bool = False,
         out_path: str = "BENCH_serving_prox.json") -> dict:
     if backend == "auto":
         backend = "native" if _native.available() else "scipy"
@@ -124,6 +245,12 @@ def run(n: int = 50_000, d: int = 20, trees: int = 50, backend: str = "auto",
     }
     print("compressed vs full:", json.dumps(report["compressed_vs_full"]),
           flush=True)
+    if sustained:
+        report["sustained"] = _sustained(
+            fk, ce, Xte, ytr, slo_ms=slo_ms, rows=sustained_rows,
+            duration_s=sustained_duration_s, ratio_target=ratio_target,
+            escalate_margin=escalate_margin, n_slots=sustained_slots,
+            prefix_depth=sustained_prefix_depth, assert_slo=assert_slo)
     with open(out_path, "w") as fh:
         json.dump(report, fh, indent=2)
     return report
@@ -141,12 +268,32 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=64)
     ap.add_argument("--requests", type=int, default=120)
     ap.add_argument("--rows", type=int, default=16)
+    ap.add_argument("--no-sustained", action="store_true",
+                    help="skip the Poisson sustained-throughput SLO mode")
+    ap.add_argument("--slo-ms", type=float, default=500.0)
+    ap.add_argument("--escalate-margin", type=float, default=0.2)
+    ap.add_argument("--sustained-rows", type=int, default=8)
+    ap.add_argument("--sustained-slots", type=int, default=128)
+    ap.add_argument("--sustained-prefix-depth", type=int, default=6)
+    ap.add_argument("--duration", type=float, default=10.0,
+                    help="sustained-mode offered-load duration (s)")
+    ap.add_argument("--ratio-target", type=float, default=50.0,
+                    help="offered load as a multiple of the sync baseline")
+    ap.add_argument("--assert-slo", action="store_true",
+                    help="fail unless p95<=SLO, zero sheds, and >=1 "
+                         "escalation agreeing with the full-engine oracle")
     ap.add_argument("--out", default="BENCH_serving_prox.json")
     args = ap.parse_args()
     run(n=args.n, d=args.d, trees=args.trees, backend=args.backend,
         n_prototypes=args.prototypes, proto_k=args.proto_k,
         n_slots=args.slots, n_requests=args.requests,
-        rows_per_request=args.rows, out_path=args.out)
+        rows_per_request=args.rows, sustained=not args.no_sustained,
+        slo_ms=args.slo_ms, escalate_margin=args.escalate_margin,
+        sustained_rows=args.sustained_rows,
+        sustained_slots=args.sustained_slots,
+        sustained_prefix_depth=args.sustained_prefix_depth,
+        sustained_duration_s=args.duration, ratio_target=args.ratio_target,
+        assert_slo=args.assert_slo, out_path=args.out)
 
 
 if __name__ == "__main__":

@@ -78,6 +78,29 @@ def main() -> None:
           f"accuracy {acc_c:.3f}; topk serves training-row ids "
           f"{got[1]['indices'][0]}")
     assert agree >= 0.85, "compression must roughly preserve predictions"
+
+    # 4. tiered serving: shallow -> compressed -> full ladder with
+    #    confidence escalation, deadlines, and observability counters
+    tsrv = fk.serve_tiered(prefix_depth=4, compressed_engine=ce,
+                           n_slots=args.slots, escalate_margin=0.3,
+                           propagator=propagator, embedding=embedding)
+    tres = tsrv.serve([("predict", Xte[:32]), ("topk", Xte[:8], 5),
+                       ("predict", Xte[32:64]), ("embed", Xte[64:80]),
+                       ("outlier", Xte[80:96])])
+    tacc = np.mean(np.concatenate([tres[0]["labels"], tres[2]["labels"]])
+                   == np.concatenate([yte[:32], yte[32:64]]))
+    ts = tsrv.stats()
+    print(f"tiered serving: {ts['requests']} requests, predict acc "
+          f"{tacc:.3f}, escalations {ts['escalations']} "
+          f"(rate {ts['escalation_rate']:.2f}), shed {ts['shed']}, "
+          f"timeouts {ts['timeouts']}")
+    for name, tstat in ts["tiers"].items():
+        qc = tstat["qs_cache"]
+        print(f"  tier {name:>10}: routed={tstat['routed_requests']}  "
+              f"shed={tstat['shed']}  qs-cache "
+              f"{qc['hits']}/{qc['hits'] + qc['misses']} hits "
+              f"(rate {qc['hit_rate']:.2f})")
+    assert tacc > 0.9, "tiered serving must predict accurately"
     print("OK")
 
 

@@ -47,16 +47,31 @@ def select_prototypes(engine, y: np.ndarray, n_prototypes: int = 3,
         members = np.flatnonzero(y == c)
         neigh = idx[members]                                  # (nc, k)
         valid = (val[members] > 0) & (y[neigh] == c)          # same-class hits
+        # Inverted index: training row -> the class members whose valid
+        # neighborhood contains it (CSR over the sorted valid entries).
+        # Covering a row then decrements exactly the gains it counted
+        # toward — O(touched entries) per pick instead of re-gathering the
+        # whole (nc, k) coverage mask every iteration.
+        vmemb, vpos = np.nonzero(valid)
+        vrow = neigh[vmemb, vpos]
+        order = np.argsort(vrow, kind="stable")
+        vrow_s, vmemb_s = vrow[order], vmemb[order]
+        row_ptr = np.searchsorted(vrow_s, np.arange(n + 1))
+        gain = valid.sum(axis=1).astype(np.int64)
         covered = np.zeros(n, dtype=bool)
         chosen = []
         for _ in range(min(n_prototypes, len(members))):
-            gain = (valid & ~covered[neigh]).sum(axis=1)
             best = int(np.argmax(gain))          # first max -> deterministic
             if gain[best] == 0 and chosen:
                 break
             chosen.append(int(members[best]))
-            covered[neigh[best][valid[best]]] = True
-            covered[members[best]] = True
+            new_rows = np.append(neigh[best][valid[best]], members[best])
+            new_rows = np.unique(new_rows[~covered[new_rows]])
+            covered[new_rows] = True
+            if len(new_rows):
+                touched = np.concatenate(
+                    [vmemb_s[row_ptr[r]:row_ptr[r + 1]] for r in new_rows])
+                np.subtract.at(gain, touched, 1)
         protos[int(c)] = np.asarray(chosen, dtype=np.int64)
         coverage[int(c)] = float(covered[members].mean())
     return protos, coverage
@@ -144,10 +159,12 @@ class CompressedProximityEngine(ProximityEngine):
             parent.W[indices].tocsr()
         self.leaf_values = parent.leaf_values
         # shared routed OOS states; everything else (ref tables, app caches,
-        # row sums) is per-view — see ProximityEngine._init_runtime_state
+        # row sums) is per-view — see ProximityEngine._init_runtime_state.
+        # The lock travels with the cache: one dict, one lock.
         self._init_runtime_state(oos_cache=parent._oos_cache,
                                  oos_cache_size=parent._oos_cache_size,
-                                 ref_cache_size=parent._ref_cache_size)
+                                 ref_cache_size=parent._ref_cache_size,
+                                 oos_lock=parent._qs_lock)
 
 
 def compress(engine: ProximityEngine, y: np.ndarray,

@@ -191,6 +191,55 @@ class ForestKernel:
             y = self.ctx.y
         return ProximityServer(eng, y=y, n_slots=n_slots, **kw)
 
+    def prefix_engine(self, depth: int):
+        """Depth-``depth`` prefix-factorization engine (DiNo/RanBu tier):
+        proximities of the depth-truncated forest, contracted from this
+        kernel's fitted factors — no refit, and OOS batches reuse the full
+        engine's routed states."""
+        from .engine import PrefixProximityEngine
+        return PrefixProximityEngine(self.engine, depth)
+
+    def serve_tiered(self, prefix_depth: Optional[int] = 4,
+                     compressed_engine=None, n_prototypes: int = 10,
+                     proto_k: int = 50, n_slots: int = 64,
+                     escalate_margin: float = 0.1, clock=None,
+                     propagator=None, embedding=None):
+        """A ``TieredProximityServer`` over the engine ladder
+        shallow (depth-prefix) → prototype-compressed → full.
+
+        ``prefix_depth=None`` drops the shallow tier;
+        ``compressed_engine=None`` builds one via :meth:`compress`.
+        ``propagate`` / ``embed`` requests (when enabled) route straight to
+        the full tier — they are fitted against the full reference set.
+        """
+        import time as _time
+        from ..serve.proximity import Tier, TieredProximityServer
+        y = self.ctx.y
+        C = self.forest.n_classes_
+        tiers = []
+        if prefix_depth is not None:
+            tiers.append(Tier("shallow", self.prefix_engine(prefix_depth),
+                              y=y, kinds=("predict",), n_slots=n_slots,
+                              n_classes=C))
+        ce = compressed_engine
+        if ce is None:
+            ce = self.compress(n_prototypes=n_prototypes, k=proto_k)
+        tiers.append(Tier("compressed", ce, y=ce.prototype_labels_,
+                          kinds=("predict", "topk", "outlier"),
+                          n_slots=n_slots, n_classes=C))
+        full_kinds = ["predict", "topk", "outlier"]
+        if propagator is not None:
+            full_kinds.append("propagate")
+        if embedding is not None:
+            full_kinds.append("embed")
+        tiers.append(Tier("full", self.engine, y=y,
+                          kinds=tuple(full_kinds), n_slots=n_slots,
+                          n_classes=C, propagator=propagator,
+                          embedding=embedding))
+        return TieredProximityServer(tiers, escalate_margin=escalate_margin,
+                                     clock=_time.time if clock is None
+                                     else clock)
+
     def prototypes(self, n_prototypes: int = 3, k: int = 50):
         """Greedy tree-space prototypes per class: (prototypes, coverage)."""
         from ..applications.prototypes import select_prototypes

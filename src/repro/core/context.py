@@ -48,10 +48,12 @@ class EnsembleContext:
 
     @classmethod
     def from_forest(cls, forest: BaseForest, X: Optional[np.ndarray] = None,
-                    y: Optional[np.ndarray] = None) -> "EnsembleContext":
+                    y: Optional[np.ndarray] = None,
+                    leaves: Optional[np.ndarray] = None) -> "EnsembleContext":
         X = forest.X_ if X is None else X
         y = forest.y_ if y is None else y
-        leaves = forest.apply(X)                      # (N, T) — batched pass
+        if leaves is None:
+            leaves = forest.apply(X)                  # (N, T) — batched pass
         n, T = leaves.shape
         ta = forest.tree_arrays()                     # cached at fit time
         n_leaves = ta.n_leaves

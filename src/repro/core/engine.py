@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 from collections import OrderedDict
 from typing import Optional, Tuple
 
@@ -44,10 +45,11 @@ from scipy.sparse.linalg import LinearOperator
 
 from ..forest import _native
 from .factorization import (full_kernel, kernel_block, kernel_matvec_operator,
-                            topk_neighbors)
+                            prefix_leaf_contraction, topk_neighbors)
 from .leafmap import build_leaf_map
 
-__all__ = ["ProximityEngine", "QueryState", "ENGINE_BACKENDS"]
+__all__ = ["ProximityEngine", "PrefixProximityEngine", "QueryState",
+           "ENGINE_BACKENDS", "prediction_margin"]
 
 ENGINE_BACKENDS = ("scipy", "jax", "pallas", "native")
 
@@ -111,7 +113,8 @@ class ProximityEngine:
                                  ref_cache_size=ref_cache_size)
 
     def _init_runtime_state(self, oos_cache=None, oos_cache_size: int = 8,
-                            ref_cache_size: int = 16) -> None:
+                            ref_cache_size: int = 16,
+                            oos_lock: Optional[threading.Lock] = None) -> None:
         """Per-engine mutable state; the single place both the primary
         constructor and factor-slicing views (CompressedProximityEngine)
         initialize it, so new runtime attributes cannot silently go missing
@@ -119,10 +122,17 @@ class ProximityEngine:
         backend, …) to be set already."""
         self._train_state = QueryState(gl=self.gl, q=self.q, Q=self.Q)
         # routed OOS query states; a view may share its parent's cache (one
-        # routed batch serves both engines)
+        # routed batch serves both engines).  The tiered server touches the
+        # cache from one worker thread per tier, so cache bookkeeping is
+        # guarded by a lock — which must be the SAME lock object wherever
+        # the cache dict itself is shared (two locks guarding one dict
+        # protect nothing).
         self._oos_cache: "OrderedDict[str, QueryState]" = \
             OrderedDict() if oos_cache is None else oos_cache
         self._oos_cache_size = oos_cache_size
+        self._qs_lock = threading.Lock() if oos_lock is None else oos_lock
+        self.qs_cache_hits = 0
+        self.qs_cache_misses = 0
         self._use_x64 = self.dtype == np.float64
         self._train_row_sums: Optional[np.ndarray] = None
         self.last_matmat_path: Optional[str] = None   # 'sharded' | 'segment'
@@ -157,9 +167,8 @@ class ProximityEngine:
         if X is None:
             return self._train_state
         key = self._batch_key(np.asarray(X))
-        hit = self._oos_cache.get(key)
+        hit = self._qs_cache_get(key)
         if hit is not None:
-            self._oos_cache.move_to_end(key)
             return hit
         assert self.forest is not None, "OOS queries need the backing forest"
         leaves = self.forest.apply(X)
@@ -169,9 +178,25 @@ class ProximityEngine:
         state = QueryState(gl=gl, q=q,
                            Q=build_leaf_map(gl, q, self.total_leaves,
                                             self.dtype))
-        self._oos_cache[key] = state
-        while len(self._oos_cache) > self._oos_cache_size:
-            self._oos_cache.popitem(last=False)
+        return self._qs_cache_put(key, state)
+
+    def _qs_cache_get(self, key: str) -> Optional[QueryState]:
+        with self._qs_lock:
+            hit = self._oos_cache.get(key)
+            if hit is not None:
+                self._oos_cache.move_to_end(key)
+                self.qs_cache_hits += 1
+            else:
+                self.qs_cache_misses += 1
+            return hit
+
+    def _qs_cache_put(self, key: str, state: QueryState) -> QueryState:
+        # build happens outside the lock — two threads racing on the same
+        # new batch duplicate work, never corrupt the dict
+        with self._qs_lock:
+            self._oos_cache[key] = state
+            while len(self._oos_cache) > self._oos_cache_size:
+                self._oos_cache.popitem(last=False)
         return state
 
     # ---------------- core products ----------------
@@ -508,3 +533,73 @@ class ProximityEngine:
             out["leaf_values"] = int(self.leaf_values.nbytes)
         out["total"] = sum(out.values())
         return out
+
+
+def prediction_margin(scores: np.ndarray) -> np.ndarray:
+    """Per-row confidence of proximity-vote class scores.
+
+    margin_i = (top1_i - top2_i) / Σ_c scores[i, c] — the normalized vote
+    gap, in [0, 1].  The tiered server escalates a request to a heavier
+    engine when ``min_i margin_i`` falls below its threshold.  Rows with a
+    single class column (or none) are fully confident by convention.
+    """
+    s = np.asarray(scores, dtype=np.float64)
+    if s.ndim != 2 or s.shape[1] < 2:
+        return np.full(s.shape[0] if s.ndim else 1, np.inf)
+    top2 = -np.partition(-s, 1, axis=1)[:, :2]
+    tot = np.maximum(s.sum(axis=1), np.finfo(np.float64).tiny)
+    return (top2[:, 0] - top2[:, 1]) / tot
+
+
+class PrefixProximityEngine(ProximityEngine):
+    """Depth-k prefix tier: the proximity engine of the depth-truncated
+    forest (DiNo/RanBu), derived from an already-fitted parent engine.
+
+    Truncating every tree at depth k induces a *leaf contraction*: each full
+    leaf has a unique ancestor at depth <= k, so the prefix forest's leaf
+    codes are a pure gather ``gl_k = gmap[gl_full]`` of the parent's routed
+    codes.  Training factors are contracted once at construction;
+    out-of-sample batches reuse the parent's routed/cached query state, so
+    one forest pass per batch serves every tier of the ladder.
+    """
+
+    def __init__(self, parent: ProximityEngine, depth: int,
+                 oos_cache_size: int = 8, ref_cache_size: int = 16):
+        from .context import EnsembleContext
+        from .weights import get_assignment
+        if parent.forest is None:
+            raise ValueError("prefix tiers need the backing forest")
+        self.parent = parent
+        self.depth = int(depth)
+        gmap, _, leaf_offset_k = prefix_leaf_contraction(
+            parent.forest.trees_, self.depth)
+        self._gmap = gmap
+        self._leaf_offset_k = leaf_offset_k
+        trunc = parent.forest.truncated(self.depth)
+        pctx = parent.ctx
+        leaves_k = (gmap[pctx.global_leaves()] -
+                    leaf_offset_k[None, :]).astype(np.int32)
+        ctx_k = EnsembleContext.from_forest(trunc, X=pctx.X, y=pctx.y,
+                                            leaves=leaves_k)
+        super().__init__(ctx_k, get_assignment(parent.assignment.name, ctx_k),
+                         forest=trunc, backend=parent.backend,
+                         dtype=parent.dtype, oos_cache_size=oos_cache_size,
+                         ref_cache_size=ref_cache_size)
+
+    def query_state(self, X: Optional[np.ndarray] = None) -> QueryState:
+        """Contract the parent's routed state instead of re-routing."""
+        if X is None:
+            return self._train_state
+        key = self._batch_key(np.asarray(X))
+        hit = self._qs_cache_get(key)
+        if hit is not None:
+            return hit
+        full = self.parent.query_state(X)      # routed once, shared by tiers
+        gl = self._gmap[full.gl]
+        leaves_k = gl - self._leaf_offset_k[None, :]
+        q = np.ascontiguousarray(
+            self.assignment.oos_query_weights(leaves_k), dtype=self.dtype)
+        state = QueryState(gl=gl, q=q,
+                           Q=build_leaf_map(gl, q, self.total_leaves,
+                                            self.dtype))
+        return self._qs_cache_put(key, state)

@@ -18,7 +18,8 @@ import scipy.sparse as sp
 from scipy.sparse.linalg import LinearOperator
 
 __all__ = ["full_kernel", "kernel_block", "kernel_matvec_operator",
-           "proximity_predict", "topk_neighbors", "naive_swlc"]
+           "proximity_predict", "topk_neighbors", "naive_swlc",
+           "prefix_leaf_contraction"]
 
 
 def full_kernel(Q: sp.csr_matrix, W: sp.csr_matrix,
@@ -91,7 +92,12 @@ def proximity_predict(Qq: sp.csr_matrix, W: sp.csr_matrix, y: np.ndarray,
 
 def topk_neighbors(Q: sp.csr_matrix, W: sp.csr_matrix, k: int,
                    block: int = 4096) -> Tuple[np.ndarray, np.ndarray]:
-    """Per-query top-k proximities, streamed in row blocks (never dense NxN)."""
+    """Per-query top-k proximities, streamed in row blocks (never dense NxN).
+
+    Per-row ``argpartition`` keeps the selection O(nnz_row) — a global sort
+    of the block's nonzeros is asymptotically worse on the near-dense
+    products the training-set kernel produces.
+    """
     n = Q.shape[0]
     idx = np.zeros((n, k), dtype=np.int64)
     val = np.zeros((n, k))
@@ -108,6 +114,30 @@ def topk_neighbors(Q: sp.csr_matrix, W: sp.csr_matrix, k: int,
             idx[i0 + r, :len(cols)] = cols[order]
             val[i0 + r, :len(vals)] = vals[order]
     return idx, val
+
+
+def prefix_leaf_contraction(trees, depth: int
+                            ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Global leaf-contraction map for the depth-``depth`` prefix forest.
+
+    Every leaf of a fitted tree has a unique ancestor at depth <= ``depth``
+    which becomes a leaf of the truncated tree, so the (N, T) leaf codes of
+    the *prefix* forest are a pure gather of the full forest's codes —
+    ``gl_k = gmap[gl_full]`` — and one routed batch serves every depth tier.
+
+    Returns ``(gmap, n_leaves_k, leaf_offset_k)``: the (L_full,) int64 map
+    from global full-forest leaf to global prefix-forest leaf, plus the
+    per-tree prefix leaf counts and offsets (the prefix forest's global leaf
+    indexing, matching ``truncate_tree``'s leaf numbering).
+    """
+    from ..forest.trees import prefix_leaf_map
+    maps = [prefix_leaf_map(t, depth) for t in trees]
+    n_leaves_k = np.array([int(m.max()) + 1 for m in maps], dtype=np.int32)
+    leaf_offset_k = np.concatenate(
+        [[0], np.cumsum(n_leaves_k[:-1])]).astype(np.int64)
+    gmap = np.concatenate(
+        [m + off for m, off in zip(maps, leaf_offset_k)]).astype(np.int64)
+    return gmap, n_leaves_k, leaf_offset_k
 
 
 def naive_swlc(leaves_q: np.ndarray, leaves_w: np.ndarray, q: np.ndarray,

@@ -16,7 +16,7 @@ import numpy as np
 
 from .bootstrap import bootstrap_counts, oob_mask
 from .trees import (Tree, TreeArrays, route_forest_batched, route_tree,
-                    stack_leaf_values)
+                    stack_leaf_values, truncate_tree)
 from .training import (Binner, TreeParams, fit_forest_binned,
                        fit_tree_binned, resolve_tree_backend)
 
@@ -138,6 +138,21 @@ class BaseForest:
             self.leaf_probs_ = v / np.maximum(v.sum(1, keepdims=True), 1e-12)
         else:
             self.leaf_probs_ = None
+
+    def truncated(self, depth: int) -> "BaseForest":
+        """The depth-``depth`` prefix of this fitted forest (DiNo/RanBu).
+
+        Every tree is replaced by its prefix via
+        :func:`~repro.forest.trees.truncate_tree`; inbag weights, binner and
+        training references are shared with the parent.  The result routes
+        and predicts exactly like a forest grown with ``max_depth=depth``
+        on the same splits — no refit.
+        """
+        out = dataclasses.replace(
+            self, trees_=[truncate_tree(t, depth) for t in self.trees_],
+            tree_arrays_=None, leaf_values_=None, leaf_probs_=None)
+        out._cache_tables()
+        return out
 
     # ----- routing / prediction -----
     def apply(self, X: np.ndarray) -> np.ndarray:

@@ -50,6 +50,7 @@ __all__ = ["TreeParams", "Binner", "fit_tree", "fit_tree_binned",
 
 _HIST_BUDGET = 1 << 26  # max float64 elements per histogram chunk (~512MB)
 _TILE_ELEMS = 1 << 20   # max elements per transient index tile (numpy hist)
+_EARLY_PRUNE = True     # drop known-leaf children's samples from the frontier
 _BATCH_BUDGET = 1 << 28  # resident frontier bytes per multi-tree batch
 
 
@@ -655,6 +656,29 @@ def _grow_trees(Xb: np.ndarray, y: np.ndarray, tasks: Sequence[tuple],
                      csum[:, 1] / np.maximum(csum[:, 0], 1e-12)], axis=1)
             ccnt = cvals.sum(1) if cls else cvals[:, 0]
             sr = np.concatenate([[0], np.cumsum(split_g)]).astype(np.int64)
+
+            # ---- early leaf pruning ----
+            # Children that can never split — single-instance, weighted
+            # count below min_samples_split, or (classification) a single
+            # nonzero class in their payload row — are dropped from the
+            # next frontier's *sample* set before the histogram pass.  The
+            # nodes themselves stay in ``acts`` with zero-width ranges, so
+            # per-tree RNG draw counts are unchanged and grown trees stay
+            # bit-identical: a zero-sample node scores -inf on every split
+            # and becomes the same leaf (its value was already stored from
+            # csum above) that a real pass would have produced.  Criteria
+            # are exact-safe only: the single-class test is order-robust,
+            # and the count test keeps a margin for float summation-order
+            # differences vs the next level's histogram totals.
+            known_leaf = child_counts <= 1
+            known_leaf |= ccnt < params.min_samples_split - 1e-6
+            if cls:
+                known_leaf |= (csum > 0).sum(axis=1) <= 1
+            if _EARLY_PRUNE and known_leaf.any():
+                keep_samples = np.repeat(~known_leaf, child_counts)
+                rows_nx = np.ascontiguousarray(rows_nx[keep_samples])
+                w_nx = np.ascontiguousarray(w_nx[keep_samples])
+                child_counts = np.where(known_leaf, 0, child_counts)
 
         new_live = []
         for i, t in enumerate(live):

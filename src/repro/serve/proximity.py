@@ -1,10 +1,10 @@
 """Continuous-batching out-of-sample proximity serving.
 
 ``ProximityServer`` fronts a fitted :class:`~repro.core.engine.ProximityEngine`
-(full or prototype-compressed) with the slot design of
+(full, prototype-compressed, or depth-prefix) with the slot design of
 :class:`~repro.serve.engine.ServingEngine`: a fixed pool of ``n_slots`` query
-slots, requests admitted FIFO into free slots as they arrive, and **one
-routed batch per tick** shared by every operation kind.
+slots, requests admitted into free slots as they arrive, and **one routed
+batch per tick** shared by every operation kind.
 
 Request kinds and the engine op each maps to:
 
@@ -27,6 +27,28 @@ engine's cached bucket tables on the scipy/native backends, so a
 steady-state tick costs O(n_slots · T · C), independent of the training-set
 size.
 
+Admission control
+-----------------
+Requests carry a **priority** (higher served first, FIFO within a priority
+level, no overtaking once queued ahead) and an optional **deadline**.  A
+request whose deadline passes while still queued is *shed* — removed
+deterministically at the next admission sweep, never silently stalled —
+and lands in ``shed_requests``.  The clock is injectable so deadline
+semantics are testable without real sleeps.
+
+Tiered serving
+--------------
+``TieredProximityServer`` stacks several engines into a latency ladder
+(e.g. depth-prefix → prototype-compressed → full) with one inner
+``ProximityServer`` per tier.  Admission routes each request to the
+cheapest tier that supports its kind; low-confidence ``predict`` answers
+(vote margin below ``escalate_margin``) escalate to the next tier while
+their deadline allows.  A request that runs out of deadline mid-ladder is
+answered from the best tier already available.  In async mode an admission
+thread and one worker thread per tier run the loops, so a slow full-engine
+tick never blocks the compressed tier; the same logic runs synchronously
+(``run_until_drained``) for deterministic tests.
+
 The slot buffer is host-owned and mutated on admission; engine calls get a
 defensive copy (`PR-1 async buffer-aliasing race
 <../serve/engine.py>`: zero-copy ``jnp.asarray`` of a mutated numpy buffer
@@ -36,13 +58,17 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 import time
 from collections import deque
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["ProxRequest", "ProximityServer"]
+from ..core.engine import prediction_margin
+
+__all__ = ["ProxRequest", "ProximityServer", "TieredProximityServer",
+           "Tier", "TieredRequest", "KINDS"]
 
 KINDS = ("predict", "topk", "outlier", "propagate", "embed")
 
@@ -55,12 +81,15 @@ class ProxRequest:
     kind: str                         # one of KINDS
     X: np.ndarray                     # (nq, d) query rows
     k: int = 10                       # top-k width (kind='topk' only)
+    priority: int = 0                 # higher = served first
+    deadline_at: Optional[float] = None   # absolute clock() deadline
 
     # runtime (owned by the server)
     slots: Optional[np.ndarray] = None     # assigned slot ids
     submitted_at: float = 0.0
     admitted_at: Optional[float] = None
     done_at: Optional[float] = None
+    shed: bool = False
     result: Any = None
 
     @property
@@ -89,7 +118,7 @@ class ProximityServer:
 
     Parameters
     ----------
-    engine : ProximityEngine (or CompressedProximityEngine)
+    engine : ProximityEngine (or a compressed/prefix view)
     y : labels of the engine's **reference columns** — the training labels
         for a full engine, ``prototype_labels_`` for a compressed one.
         Needed by ``predict`` and ``outlier`` requests.
@@ -97,11 +126,13 @@ class ProximityServer:
     propagator : OnlineLabelPropagation, enables ``propagate`` requests.
     embedding : fitted ProximityEmbedding, enables ``embed`` requests.
     n_classes : class count (default ``y.max() + 1``).
+    clock : injectable time source for deadline semantics (default
+        ``time.time``); deterministic tests pass a fake.
     """
 
     def __init__(self, engine, y: Optional[np.ndarray] = None,
                  n_slots: int = 64, n_classes: Optional[int] = None,
-                 propagator=None, embedding=None):
+                 propagator=None, embedding=None, clock=time.time):
         self.engine = engine
         self.y = None if y is None else np.asarray(y, dtype=np.int64)
         if n_classes is None and self.y is not None and len(self.y):
@@ -110,20 +141,30 @@ class ProximityServer:
         self.n_slots = int(n_slots)
         self.propagator = propagator
         self.embedding = embedding
+        self._clock = clock
 
         self._slot_X: Optional[np.ndarray] = None    # (n_slots, d), lazy
         self._slot_free: List[int] = list(range(self.n_slots))
         self.active: Dict[int, ProxRequest] = {}     # uid -> request
         self.queue: "deque[ProxRequest]" = deque()
         self.finished: List[ProxRequest] = []
+        self.shed_requests: List[ProxRequest] = []
         self._uids = itertools.count()
         self.ticks = 0
         self.rows_served = 0
         self._occupancy: List[int] = []
 
     # ---------------- public API ----------------
-    def submit(self, kind: str, X: np.ndarray, k: int = 10) -> int:
-        """Queue a request; returns its uid (see ``.finished`` / ``serve``)."""
+    def submit(self, kind: str, X: np.ndarray, k: int = 10,
+               priority: int = 0, deadline_s: Optional[float] = None,
+               deadline_at: Optional[float] = None) -> int:
+        """Queue a request; returns its uid (see ``.finished`` / ``serve``).
+
+        ``priority``: higher values are served first; FIFO within a level.
+        ``deadline_s``: relative deadline from now; ``deadline_at`` passes an
+        absolute clock value instead (the tiered server uses it so a
+        request's deadline survives escalation unchanged).
+        """
         if kind not in KINDS:
             raise ValueError(f"unknown request kind {kind!r}; have {KINDS}")
         if kind in ("predict", "outlier") and self.y is None:
@@ -138,9 +179,21 @@ class ProximityServer:
         if X.shape[0] > self.n_slots:
             raise ValueError(f"request rows {X.shape[0]} exceed "
                              f"n_slots={self.n_slots}; split the batch")
-        req = ProxRequest(uid=next(self._uids), kind=kind, X=X, k=int(k))
-        req.submitted_at = time.time()
-        self.queue.append(req)
+        now = self._clock()
+        if deadline_at is None and deadline_s is not None:
+            deadline_at = now + float(deadline_s)
+        req = ProxRequest(uid=next(self._uids), kind=kind, X=X, k=int(k),
+                          priority=int(priority), deadline_at=deadline_at)
+        req.submitted_at = now
+        # insert after every request of >= priority: higher priorities jump
+        # the line, equal priorities stay FIFO (stable, no overtaking)
+        idx = len(self.queue)
+        while idx > 0 and self.queue[idx - 1].priority < req.priority:
+            idx -= 1
+        if idx == len(self.queue):
+            self.queue.append(req)
+        else:
+            self.queue.insert(idx, req)
         return req.uid
 
     def step(self) -> int:
@@ -168,7 +221,7 @@ class ProximityServer:
             self._run_kind(kind, reqs, X_tick, pos)
 
         retired = 0
-        now = time.time()
+        now = self._clock()
         for req in list(self.active.values()):
             req.done_at = now
             self.finished.append(req)
@@ -186,17 +239,29 @@ class ProximityServer:
         return self.finished
 
     def serve(self, requests, max_ticks: int = 10_000) -> List[Any]:
-        """Submit ``(kind, X[, k])`` tuples, drain, return results in order."""
+        """Submit ``(kind, X[, k])`` tuples, drain, return results in order
+        (``None`` for requests shed past their deadline)."""
         uids = [self.submit(*r) for r in requests]
         self.run_until_drained(max_ticks=max_ticks)
         by_uid = {r.uid: r.result for r in self.finished}
-        return [by_uid[u] for u in uids]
+        return [by_uid.get(u) for u in uids]
 
     # ---------------- internals ----------------
     def _admit(self) -> None:
-        """FIFO admission into free slots (no overtaking: a wide request at
-        the head blocks narrower ones behind it, keeping service order)."""
-        now = time.time()
+        """Shed expired requests, then admit by priority into free slots
+        (no overtaking: a wide request at the head blocks narrower ones
+        behind it, keeping service order within each priority level)."""
+        now = self._clock()
+        if any(r.deadline_at is not None for r in self.queue):
+            kept: "deque[ProxRequest]" = deque()
+            for r in self.queue:
+                if r.deadline_at is not None and now > r.deadline_at:
+                    r.shed = True
+                    r.done_at = now
+                    self.shed_requests.append(r)
+                else:
+                    kept.append(r)
+            self.queue = kept
         while self.queue and len(self._slot_free) >= self.queue[0].n_rows:
             req = self.queue.popleft()
             if self._slot_X is None:
@@ -256,6 +321,13 @@ class ProximityServer:
             "mean_occupancy": float(np.mean(self._occupancy))
             if self._occupancy else 0.0,
             "queue_depth": len(self.queue),
+            "shed": len(self.shed_requests),
+        }
+        hits = int(getattr(self.engine, "qs_cache_hits", 0))
+        misses = int(getattr(self.engine, "qs_cache_misses", 0))
+        out["qs_cache"] = {
+            "hits": hits, "misses": misses,
+            "hit_rate": hits / max(hits + misses, 1),
         }
         per: Dict[str, Dict[str, float]] = {}
         for kind in KINDS:
@@ -276,4 +348,338 @@ class ProximityServer:
                 "mean_wait_ms": float(np.mean(wait) * 1e3) if wait else 0.0,
             }
         out["kinds"] = per
+        return out
+
+
+# ===========================================================================
+# tiered serving
+# ===========================================================================
+
+@dataclasses.dataclass
+class Tier:
+    """One rung of the engine ladder.
+
+    ``kinds`` declares what this tier can answer; kinds absent here route
+    past it at admission (e.g. a compressed tier cannot serve ``propagate``
+    / ``embed``, which are fitted against the full reference set).
+    """
+
+    name: str
+    engine: object
+    y: Optional[np.ndarray] = None
+    kinds: Tuple[str, ...] = KINDS
+    n_slots: int = 64
+    n_classes: Optional[int] = None
+    propagator: object = None
+    embedding: object = None
+
+
+@dataclasses.dataclass
+class TieredRequest:
+    """A request's journey through the ladder."""
+
+    uid: int
+    kind: str
+    X: np.ndarray
+    k: int
+    priority: int
+    deadline_at: Optional[float]
+    submitted_at: float
+
+    answers: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    tier_path: List[str] = dataclasses.field(default_factory=list)
+    result: Any = None
+    final_tier: Optional[str] = None
+    escalations: int = 0
+    shed: bool = False
+    timed_out: bool = False
+    done_at: Optional[float] = None
+    done: threading.Event = dataclasses.field(default_factory=threading.Event)
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return None if self.done_at is None else \
+            self.done_at - self.submitted_at
+
+
+class TieredProximityServer:
+    """Deadline-aware serving across an engine ladder.
+
+    Tiers are ordered cheapest-first.  Admission routes each request to the
+    first tier whose ``kinds`` include its kind; completed ``predict``
+    answers whose minimum vote margin (``prediction_margin``) falls below
+    ``escalate_margin`` escalate to the next capable tier while the
+    request's deadline allows.  When the deadline runs out mid-ladder the
+    best answer already computed is returned (``timed_out``); a request
+    shed before *any* tier answered is dropped (``shed``).
+
+    Async mode (``start()``) runs one admission thread plus one worker
+    thread per tier, each ticking its own inner ``ProximityServer`` under a
+    per-tier lock — a slow full-engine tick never blocks the compressed
+    tier's loop.  The identical logic runs synchronously via
+    ``run_until_drained`` for deterministic tests.
+    """
+
+    def __init__(self, tiers: Sequence[Tier], escalate_margin: float = 0.1,
+                 clock=time.time):
+        if not tiers:
+            raise ValueError("need at least one tier")
+        self.tiers = list(tiers)
+        self.escalate_margin = float(escalate_margin)
+        self._clock = clock
+        self._servers = [
+            ProximityServer(t.engine, y=t.y, n_slots=t.n_slots,
+                            n_classes=t.n_classes, propagator=t.propagator,
+                            embedding=t.embedding, clock=clock)
+            for t in self.tiers]
+        # pre-warm lazy routing tables so worker threads never race the
+        # first build of TreeArrays._flat
+        for t in self.tiers:
+            forest = getattr(t.engine, "forest", None)
+            if forest is not None:
+                forest.tree_arrays().flat()
+
+        self._locks = [threading.Lock() for _ in self.tiers]
+        self._inbox: "deque[TieredRequest]" = deque()
+        self._inbox_lock = threading.Lock()
+        self._uids = itertools.count()
+        self._requests: Dict[int, TieredRequest] = {}
+        # inner uid -> TieredRequest, per tier
+        self._pending: List[Dict[int, TieredRequest]] = \
+            [{} for _ in self.tiers]
+        self._seen_finished = [0] * len(self.tiers)
+        self._seen_shed = [0] * len(self.tiers)
+        self.finished: List[TieredRequest] = []
+        self._finished_lock = threading.Lock()
+
+        self.escalations = 0
+        self.sheds = 0
+        self.timeouts = 0
+        self._tier_requests = [0] * len(self.tiers)
+
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+
+    # ---------------- submission / routing ----------------
+    def _tier_for(self, kind: str, n_rows: int,
+                  after: int = -1) -> Optional[int]:
+        for i in range(after + 1, len(self.tiers)):
+            if kind in self.tiers[i].kinds and \
+                    n_rows <= self.tiers[i].n_slots:
+                return i
+        return None
+
+    def _last_tier_for(self, kind: str, n_rows: int,
+                       after: int = -1) -> Optional[int]:
+        """Deepest tier serving ``kind`` — the escalation target.  A
+        low-confidence prediction goes straight to the reference engine:
+        an intermediate tier answering confidently-but-wrong (prototype
+        factors especially) would otherwise terminate the ladder early."""
+        for i in range(len(self.tiers) - 1, after, -1):
+            if kind in self.tiers[i].kinds and \
+                    n_rows <= self.tiers[i].n_slots:
+                return i
+        return None
+
+    def submit(self, kind: str, X: np.ndarray, k: int = 10,
+               priority: int = 0, deadline_s: Optional[float] = None) -> int:
+        if kind not in KINDS:
+            raise ValueError(f"unknown request kind {kind!r}; have {KINDS}")
+        X = np.ascontiguousarray(X, dtype=np.float64)
+        if X.ndim != 2:
+            raise ValueError(f"X must be (n_rows, d), got {X.shape}")
+        if self._tier_for(kind, X.shape[0]) is None:
+            raise ValueError(f"no tier serves kind {kind!r} at "
+                             f"{X.shape[0]} rows")
+        now = self._clock()
+        deadline_at = None if deadline_s is None else now + float(deadline_s)
+        treq = TieredRequest(uid=next(self._uids), kind=kind, X=X, k=int(k),
+                             priority=int(priority), deadline_at=deadline_at,
+                             submitted_at=now)
+        self._requests[treq.uid] = treq
+        with self._inbox_lock:
+            self._inbox.append(treq)
+        return treq.uid
+
+    def _route_inbox(self) -> int:
+        routed = 0
+        while True:
+            with self._inbox_lock:
+                if not self._inbox:
+                    return routed
+                treq = self._inbox.popleft()
+            i = self._tier_for(treq.kind, treq.X.shape[0])
+            self._enqueue(i, treq)
+            routed += 1
+
+    def _enqueue(self, i: int, treq: TieredRequest) -> None:
+        with self._locks[i]:
+            inner_uid = self._servers[i].submit(
+                treq.kind, treq.X, k=treq.k, priority=treq.priority,
+                deadline_at=treq.deadline_at)
+            self._pending[i][inner_uid] = treq
+            self._tier_requests[i] += 1
+            treq.tier_path.append(self.tiers[i].name)
+
+    # ---------------- completion / escalation ----------------
+    def _collect(self, i: int) -> List[Tuple[ProxRequest, bool]]:
+        """Newly finished/shed inner requests of tier i (caller need not
+        hold the tier lock; lists are append-only and indices monotone)."""
+        srv = self._servers[i]
+        out: List[Tuple[ProxRequest, bool]] = []
+        fin = srv.finished
+        while self._seen_finished[i] < len(fin):
+            out.append((fin[self._seen_finished[i]], False))
+            self._seen_finished[i] += 1
+        sh = srv.shed_requests
+        while self._seen_shed[i] < len(sh):
+            out.append((sh[self._seen_shed[i]], True))
+            self._seen_shed[i] += 1
+        return out
+
+    def _settle(self, i: int, inner: ProxRequest, was_shed: bool) -> None:
+        treq = self._pending[i].pop(inner.uid, None)
+        if treq is None:
+            return
+        tname = self.tiers[i].name
+        if was_shed:
+            if treq.answers:
+                # past deadline with an earlier tier's answer in hand:
+                # answer from the best tier already available
+                treq.timed_out = True
+                self.timeouts += 1
+                self._finalize(treq, best=True)
+            else:
+                treq.shed = True
+                self.sheds += 1
+                self._finalize(treq, best=False)
+            return
+        treq.answers[tname] = inner.result
+        nxt = self._last_tier_for(treq.kind, treq.X.shape[0], after=i)
+        if (treq.kind == "predict" and nxt is not None
+                and self.escalate_margin > 0):
+            margin = prediction_margin(inner.result["scores"])
+            if margin.size and float(margin.min()) < self.escalate_margin:
+                if treq.deadline_at is None or \
+                        self._clock() <= treq.deadline_at:
+                    treq.escalations += 1
+                    self.escalations += 1
+                    self._enqueue(nxt, treq)
+                    return
+                treq.timed_out = True
+                self.timeouts += 1
+        self._finalize(treq, best=True)
+
+    def _finalize(self, treq: TieredRequest, best: bool) -> None:
+        if best and treq.tier_path:
+            # deepest tier that answered (tier_path order = ladder order)
+            for name in reversed(treq.tier_path):
+                if name in treq.answers:
+                    treq.final_tier = name
+                    treq.result = treq.answers[name]
+                    break
+        treq.done_at = self._clock()
+        with self._finished_lock:
+            self.finished.append(treq)
+        treq.done.set()
+
+    # ---------------- synchronous loop ----------------
+    def _pump_tier(self, i: int) -> bool:
+        """Tick tier i until drained, settle its completions.  Returns
+        whether any work happened."""
+        srv = self._servers[i]
+        busy = False
+        with self._locks[i]:
+            while srv.queue or srv.active:
+                srv.step()
+                busy = True
+        for inner, was_shed in self._collect(i):
+            self._settle(i, inner, was_shed)
+            busy = True
+        return busy
+
+    def run_until_drained(self, max_rounds: int = 10_000) -> None:
+        """Deterministic synchronous drain: route, then pump tiers in
+        ladder order until no tier has work (escalations settle in the
+        same round they are issued)."""
+        for _ in range(max_rounds):
+            busy = self._route_inbox() > 0
+            for i in range(len(self.tiers)):
+                busy = self._pump_tier(i) or busy
+            if not busy:
+                return
+
+    def serve(self, requests) -> List[Any]:
+        """Submit ``(kind, X[, k])`` tuples, drain synchronously, return
+        results in submission order (``None`` for shed requests)."""
+        uids = [self.submit(*r) for r in requests]
+        self.run_until_drained()
+        return [self._requests[u].result for u in uids]
+
+    # ---------------- async loop ----------------
+    def start(self) -> "TieredProximityServer":
+        """Spawn the admission thread and one worker per tier."""
+        if self._threads:
+            return self
+        self._stop.clear()
+        self._threads.append(threading.Thread(
+            target=self._admission_loop, name="prox-admit", daemon=True))
+        for i in range(len(self.tiers)):
+            self._threads.append(threading.Thread(
+                target=self._worker_loop, args=(i,),
+                name=f"prox-tier-{self.tiers[i].name}", daemon=True))
+        for t in self._threads:
+            t.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=10.0)
+        self._threads = []
+
+    def wait(self, uids: Sequence[int], timeout: Optional[float] = None
+             ) -> List[Any]:
+        """Block until the given requests finish; returns their results."""
+        for u in uids:
+            self._requests[u].done.wait(timeout)
+        return [self._requests[u].result for u in uids]
+
+    def _admission_loop(self) -> None:
+        while not self._stop.is_set():
+            if self._route_inbox() == 0:
+                time.sleep(0.0005)
+
+    def _worker_loop(self, i: int) -> None:
+        srv = self._servers[i]
+        while not self._stop.is_set():
+            with self._locks[i]:
+                retired = srv.step() if (srv.queue or srv.active) else 0
+                idle = not (srv.queue or srv.active)
+            settled = 0
+            for inner, was_shed in self._collect(i):
+                self._settle(i, inner, was_shed)
+                settled += 1
+            if retired == 0 and settled == 0 and idle:
+                time.sleep(0.0005)
+
+    # ---------------- accounting ----------------
+    def stats(self) -> Dict[str, Any]:
+        """Ladder-level counters plus each tier's inner server stats."""
+        with self._finished_lock:
+            n_done = len(self.finished)
+        predicts = sum(1 for r in self._requests.values()
+                       if r.kind == "predict")
+        out: Dict[str, Any] = {
+            "requests": n_done,
+            "escalations": self.escalations,
+            "escalation_rate": self.escalations / max(predicts, 1),
+            "shed": self.sheds,
+            "timeouts": self.timeouts,
+            "tiers": {},
+        }
+        for i, t in enumerate(self.tiers):
+            st = self._servers[i].stats()
+            st["routed_requests"] = self._tier_requests[i]
+            out["tiers"][t.name] = st
         return out

@@ -15,7 +15,10 @@ import numpy as np
 import pytest
 
 from repro.core.api import ForestKernel
-from repro.core.engine import ENGINE_BACKENDS, ProximityEngine
+from repro.core.context import EnsembleContext
+from repro.core.engine import (ENGINE_BACKENDS, PrefixProximityEngine,
+                               ProximityEngine)
+from repro.core.weights import get_assignment
 from repro.data.synthetic import gaussian_classes
 from repro.forest import _native
 
@@ -135,6 +138,58 @@ def test_empty_oos_batch(app_kernel_cache, backend):
     assert eng.squared_row_sums(class_ids=y, n_classes=C, X=X0).shape == (0, C)
     idx, val = eng.topk(k=3, X=X0)
     assert idx.shape == (0, 3) and val.shape == (0, 3)
+
+
+# ------------------------------------------------- depth-prefix tiers -----
+@pytest.mark.parametrize("depth", [1, 2, 4])
+def test_prefix_factorization_exact(app_kernel_cache, depth):
+    """The depth-k prefix engine (leaf contraction of the fitted factors,
+    no re-routing) must match a dense oracle built the expensive way: trees
+    truncated at depth k, the training set re-routed through them, and a
+    fresh engine fitted on that context — atol 1e-8, train and OOS sides."""
+    parent = app_kernel_cache["scipy"].engine
+    X, _ = app_kernel_cache["_data"]
+    pe = PrefixProximityEngine(parent, depth)
+
+    trunc = parent.forest.truncated(depth)
+    ctx_o = EnsembleContext.from_forest(trunc, X=parent.ctx.X, y=parent.ctx.y)
+    oracle = ProximityEngine(ctx_o, get_assignment(parent.assignment.name,
+                                                   ctx_o),
+                             forest=trunc, backend="scipy")
+    # contracted leaves == re-routed leaves (prefix routing is a prefix)
+    np.testing.assert_array_equal(pe.ctx.leaves, ctx_o.leaves)
+    P_o = _dense(oracle.Q @ oracle.W.T)
+    np.testing.assert_allclose(_dense(pe.Q @ pe.W.T), P_o, atol=1e-8)
+
+    Xq = np.ascontiguousarray(X[:23] + 1e-3)
+    Pq_o = _dense(oracle.query_state(Xq).Q @ oracle.W.T)
+    np.testing.assert_allclose(_dense(pe.query_state(Xq).Q @ pe.W.T),
+                               Pq_o, atol=1e-8)
+    # engine ops go through the contracted factors too
+    y = parent.ctx.y
+    C = int(y.max()) + 1
+    np.testing.assert_allclose(pe.predict(y, n_classes=C, X=Xq),
+                               oracle.predict(y, n_classes=C, X=Xq),
+                               atol=1e-8)
+    _, val_p = pe.topk(k=5, X=Xq)
+    np.testing.assert_allclose(val_p, -np.sort(-Pq_o, axis=1)[:, :5],
+                               atol=1e-8)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_prefix_engine_backends_agree(app_kernel_cache, backend):
+    """Every backend serves the contracted factors identically."""
+    parent = app_kernel_cache["scipy"].engine
+    X, y = app_kernel_cache["_data"]
+    pe = PrefixProximityEngine(parent, 3)
+    ref = _dense(pe.Q @ pe.W.T)
+    if backend == "scipy":
+        eng = pe
+    else:
+        eng = ProximityEngine(pe.ctx, pe.assignment, forest=pe.forest,
+                              backend=backend)
+    V = np.random.default_rng(5).normal(size=(ref.shape[1], 3))
+    np.testing.assert_allclose(eng.matmat(V), ref @ V, atol=1e-8)
 
 
 # ------------------------------------------------- degenerate forests -----

@@ -225,3 +225,218 @@ def test_results_survive_slot_buffer_mutation(serving_setup):
     ref = fk.engine.predict(y, n_classes=3,
                             X=np.ascontiguousarray(Xq[:8])).argmax(1)
     np.testing.assert_array_equal(res["labels"], ref)
+
+
+# ------------------------------------------------- priorities/deadlines ---
+def _fake_clock():
+    t = [0.0]
+
+    def clock():
+        return t[0]
+
+    clock.t = t
+    return clock
+
+
+def test_priority_order_and_fifo_within_level(serving_setup):
+    fk, y = serving_setup["fk"], serving_setup["y"]
+    Xq = serving_setup["Xq"]
+    srv = ProximityServer(fk.engine, y=y, n_slots=4)
+    # all three queue before the first admission: the high-priority request
+    # jumps both lows, and the lows stay FIFO relative to each other
+    low1 = srv.submit("predict", Xq[:3], priority=0)
+    low2 = srv.submit("predict", Xq[3:6], priority=0)
+    high = srv.submit("predict", Xq[6:9], priority=5)
+    srv.run_until_drained()
+    order = [r.uid for r in srv.finished]
+    assert order == [high, low1, low2], order
+
+
+def test_deadline_shed_is_deterministic(serving_setup):
+    fk, y = serving_setup["fk"], serving_setup["y"]
+    Xq = serving_setup["Xq"]
+    clock = _fake_clock()
+    srv = ProximityServer(fk.engine, y=y, n_slots=4, clock=clock)
+    live = srv.submit("predict", Xq[:4], deadline_s=100.0)
+    doomed = srv.submit("predict", Xq[4:8], deadline_s=10.0)
+    clock.t[0] = 50.0           # past doomed's deadline, inside live's
+    srv.run_until_drained()
+    assert [r.uid for r in srv.finished] == [live]
+    assert [r.uid for r in srv.shed_requests] == [doomed]
+    shed = srv.shed_requests[0]
+    assert shed.shed and shed.result is None and shed.done_at == 50.0
+    st = srv.stats()
+    assert st["shed"] == 1 and st["requests"] == 1
+    # serve() reports shed requests as None, in order
+    srv2 = ProximityServer(fk.engine, y=y, n_slots=4, clock=clock)
+    u = srv2.submit("predict", Xq[:4], deadline_s=-1.0)   # already expired
+    srv2.run_until_drained()
+    assert srv2.shed_requests[0].uid == u
+
+
+def test_tiered_escalation_reproducible_under_reordering(serving_setup):
+    fk = serving_setup["fk"]
+    Xq = serving_setup["Xq"]
+    reqs = [("predict", Xq[:7]), ("predict", Xq[7:20]),
+            ("topk", Xq[20:28], 4), ("predict", Xq[28:41])]
+    perm = [2, 3, 0, 1]
+
+    def fresh():
+        return fk.serve_tiered(prefix_depth=3, n_prototypes=6, proto_k=60,
+                               n_slots=32, escalate_margin=0.5)
+
+    a_srv, b_srv = fresh(), fresh()
+    res_a = a_srv.serve(reqs)
+    res_b = b_srv.serve([reqs[i] for i in perm])
+    for out_pos, in_pos in enumerate(perm):
+        a, b = res_a[in_pos], res_b[out_pos]
+        assert sorted(a) == sorted(b)
+        for key in a:
+            np.testing.assert_allclose(a[key], b[key], atol=1e-10,
+                                       err_msg=f"req {in_pos} field {key}")
+    # identical escalation decisions, not just identical answers
+    path_a = {r.uid: r.tier_path for r in a_srv.finished}
+    path_b = {r.uid: r.tier_path for r in b_srv.finished}
+    uids_a = sorted(path_a)
+    for out_pos, in_pos in enumerate(perm):
+        assert path_a[uids_a[in_pos]] == \
+            path_b[sorted(path_b)[out_pos]], (in_pos, out_pos)
+    assert a_srv.stats()["escalations"] == b_srv.stats()["escalations"]
+
+
+def test_tiered_deadline_answers_from_best_available(serving_setup):
+    """A request past its deadline after the cheap tier answered must be
+    finalized with that answer (timed_out), not dropped and not escalated."""
+    fk = serving_setup["fk"]
+    Xq = serving_setup["Xq"]
+    clock = _fake_clock()
+    srv = fk.serve_tiered(prefix_depth=2, n_prototypes=6, proto_k=60,
+                          n_slots=32, escalate_margin=2.0,   # always escalate
+                          clock=clock)
+
+    # advance the clock past the deadline as soon as the first tier answers
+    shallow_srv = srv._servers[0]
+    orig_step = shallow_srv.step
+
+    def stepping():
+        n = orig_step()
+        if n:
+            clock.t[0] = 1000.0
+        return n
+
+    shallow_srv.step = stepping
+    uid = srv.submit("predict", Xq[:6], deadline_s=500.0)
+    srv.run_until_drained()
+    treq = srv._requests[uid]
+    assert treq.timed_out and not treq.shed
+    assert treq.final_tier == srv.tiers[0].name
+    assert treq.result is not None
+    st = srv.stats()
+    assert st["timeouts"] == 1 and st["shed"] == 0
+
+
+def test_tiered_shed_before_any_answer(serving_setup):
+    fk = serving_setup["fk"]
+    Xq = serving_setup["Xq"]
+    clock = _fake_clock()
+    srv = fk.serve_tiered(prefix_depth=2, n_prototypes=6, proto_k=60,
+                          n_slots=32, clock=clock)
+    uid = srv.submit("predict", Xq[:6], deadline_s=10.0)
+    clock.t[0] = 20.0
+    srv.run_until_drained()
+    treq = srv._requests[uid]
+    assert treq.shed and treq.result is None
+    assert srv.stats()["shed"] == 1
+
+
+def test_tiered_kind_routing_and_agreement(serving_setup):
+    """propagate/embed route to the full tier; escalated predictions agree
+    with direct full-engine answers."""
+    fk, y = serving_setup["fk"], serving_setup["y"]
+    Xq = serving_setup["Xq"]
+    srv = fk.serve_tiered(prefix_depth=3, n_prototypes=8, proto_k=60,
+                          n_slots=32, escalate_margin=2.0,  # force full tier
+                          propagator=serving_setup["propagator"],
+                          embedding=serving_setup["embedding"])
+    res = srv.serve([("predict", Xq[:20]), ("embed", Xq[20:30])])
+    ref = fk.engine.predict(y, n_classes=3,
+                            X=np.ascontiguousarray(Xq[:20])).argmax(1)
+    np.testing.assert_array_equal(res[0]["labels"], ref)
+    pred_req = srv.finished[0] if srv.finished[0].kind == "predict" \
+        else srv.finished[1]
+    assert pred_req.final_tier == "full"
+    # escalation jumps to the deepest tier serving the kind, skipping
+    # intermediate rungs that can be confidently wrong
+    assert pred_req.tier_path == ["shallow", "full"]
+    embed_req = [r for r in srv.finished if r.kind == "embed"][0]
+    assert embed_req.tier_path == ["full"]
+    st = srv.stats()
+    assert st["tiers"]["full"]["routed_requests"] == 2
+    assert 0 < st["escalation_rate"] <= 2.0
+
+
+def test_tiered_observability_counters(serving_setup):
+    fk = serving_setup["fk"]
+    Xq = serving_setup["Xq"]
+    srv = fk.serve_tiered(prefix_depth=3, n_prototypes=8, proto_k=60,
+                          n_slots=32, escalate_margin=0.4)
+    srv.serve([("predict", Xq[:10]), ("predict", Xq[10:20])])
+    # same batches again: the engines' query-state caches must hit
+    srv.serve([("predict", Xq[:10]), ("predict", Xq[10:20])])
+    st = srv.stats()
+    assert set(st["tiers"]) == {"shallow", "compressed", "full"}
+    for tname, tstats in st["tiers"].items():
+        assert {"qs_cache", "shed", "requests"} <= set(tstats)
+    shallow = st["tiers"]["shallow"]["qs_cache"]
+    assert shallow["hits"] >= 1 and 0 < shallow["hit_rate"] <= 1
+
+
+# ------------------------------------------- threaded serving regression --
+def test_async_tiered_matches_sync_and_never_aliases_slots(serving_setup):
+    """The multi-threaded loop (admission thread + per-tier workers) must
+    produce the same answers as the synchronous drain, and engine calls in
+    worker threads must never alias any tier's mutable slot buffer (the
+    PR-1 race pattern, now across threads)."""
+    fk = serving_setup["fk"]
+    Xq = serving_setup["Xq"]
+
+    def fresh():
+        return fk.serve_tiered(prefix_depth=3, n_prototypes=8, proto_k=60,
+                               n_slots=16, escalate_margin=0.5)
+
+    reqs = [("predict", Xq[i * 6:(i + 1) * 6]) for i in range(8)] + \
+        [("topk", Xq[48:56], 4)]
+    sync_res = fresh().serve(reqs)
+
+    srv = fresh()
+    seen = []
+    engines = [t.engine for t in srv.tiers]
+    originals = [e.query_state for e in engines]
+
+    def record(orig):
+        def recording(X=None):
+            if X is not None:
+                seen.append(X)
+            return orig(X)
+        return recording
+
+    for e, orig in zip(engines, originals):
+        e.query_state = record(orig)
+    try:
+        srv.start()
+        uids = [srv.submit(*r) for r in reqs]
+        out = srv.wait(uids, timeout=60.0)
+    finally:
+        srv.stop()
+        for e, orig in zip(engines, originals):
+            e.query_state = orig
+    assert seen, "no engine batches observed"
+    for X in seen:
+        for inner in srv._servers:
+            if inner._slot_X is not None:
+                assert not np.shares_memory(X, inner._slot_X), \
+                    "engine batch aliases a tier's mutable slot buffer"
+    for a, b in zip(sync_res, out):
+        assert b is not None
+        for key in a:
+            np.testing.assert_allclose(a[key], b[key], atol=1e-10)

@@ -328,3 +328,71 @@ def test_forest_kernel_threads_tree_backend():
     # downstream proximity ops see identical forests -> identical kernels
     P0, P1 = (fk.kernel().toarray() for fk in fks)
     np.testing.assert_array_equal(P0, P1)
+
+
+# ---------------------------------------------------------------- pruning
+def _fit_with_prune(cls_, prune, monkeypatch, **kw):
+    import repro.forest.training as tr
+    monkeypatch.setattr(tr, "_EARLY_PRUNE", prune)
+    X, y = kw.pop("data")
+    return cls_(**kw).fit(X, y)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "native"])
+@pytest.mark.parametrize("model,task", [
+    (RandomForest, "classification"),
+    (ExtraTrees, "classification"),
+    (RandomForest, "regression"),
+    (GradientBoostedTrees, "regression"),
+])
+def test_early_pruning_bit_identity(model, task, backend, monkeypatch):
+    """Dropping known-leaf children's samples from the frontier must not
+    change a single grown tree, on either backend.  High class separation
+    makes children go pure early, so the pruned path is exercised hard;
+    GBT additionally checks that RNG consumption is untouched (one rng is
+    threaded through every boosting stage sequentially)."""
+    if task == "classification":
+        data = gaussian_classes(900, d=8, n_classes=3, sep=3.0, seed=7)
+    else:
+        data = friedman1(700, seed=7)
+    kw = dict(data=data, n_trees=5, seed=2, task=task, tree_backend=backend)
+    f_on = _fit_with_prune(model, True, monkeypatch, **kw)
+    kw["data"] = data
+    f_off = _fit_with_prune(model, False, monkeypatch, **kw)
+    assert_trees_identical(f_on.trees_, f_off.trees_,
+                           f"{model.__name__}/{task}/{backend} prune")
+
+
+@pytest.mark.parametrize("backend", ["numpy", "native"])
+def test_early_pruning_reduces_frontier_work(backend, monkeypatch):
+    """The pruned frontier must histogram strictly fewer samples on
+    separable data (pure children abound), and the per-level sample totals
+    must be a lower envelope of the unpruned run's."""
+    import repro.forest.training as tr
+    data = gaussian_classes(1200, d=8, n_classes=3, sep=3.0, seed=9)
+    totals = {}
+    for prune in (True, False):
+        monkeypatch.setattr(tr, "_EARLY_PRUNE", prune)
+        seen = []
+        if backend == "numpy":
+            orig_hist = tr._hist_numpy
+
+            def spy_hist(Xb, rows, w, yv, bounds, d, B, C, cls):
+                seen.append(len(rows))
+                return orig_hist(Xb, rows, w, yv, bounds, d, B, C, cls)
+
+            monkeypatch.setattr(tr, "_hist_numpy", spy_hist)
+        else:
+            from repro.forest import _native as nat
+            orig_level = nat.train_level_native
+
+            def spy_level(Xb, rows, *a, **k):
+                seen.append(len(rows))
+                return orig_level(Xb, rows, *a, **k)
+
+            monkeypatch.setattr(nat, "train_level_native", spy_level)
+        X, y = data
+        RandomForest(n_trees=4, seed=3, tree_backend=backend).fit(X, y)
+        totals[prune] = sum(seen)
+        monkeypatch.undo()
+    assert totals[True] < totals[False], totals

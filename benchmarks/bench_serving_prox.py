@@ -25,6 +25,7 @@ from repro.core.api import ForestKernel
 from repro.data.synthetic import gaussian_classes, train_test_split
 from repro.forest import _native
 from repro.serve.proximity import ProximityServer
+from repro.serve.reliability import FaultInjector, RetryPolicy
 
 
 def _workload(Xte, n_requests: int, rows: int, seed: int = 0):
@@ -188,6 +189,130 @@ def _sustained(fk, ce, Xte, ytr, *, slo_ms: float = 500.0, rows: int = 8,
     return out
 
 
+def _chaos(fk, ce, Xte, ytr, *, error_rate: float = 0.15,
+           corrupt_rate: float = 0.05, n_requests: int = 200, rows: int = 8,
+           n_slots: int = 16, prefix_depth: int = 6,
+           escalate_margin: float = 0.2, max_p95_inflation: float = 25.0,
+           assert_chaos: bool = False, seed: int = 2) -> dict:
+    """Chaos mode: the mixed workload against the tiered server with
+    synthetic faults injected into >=5% of engine calls.
+
+    The reliability contract under test: every admitted request either
+    completes (possibly after retries / down-ladder re-routes) or is
+    deterministically shed/failed with a recorded reason — zero silent
+    losses — and p95 latency inflates by at most ``max_p95_inflation``x
+    over the fault-free run.
+    """
+    reqs = _workload(Xte, n_requests, rows, seed=seed)
+
+    def _drain(injector=None):
+        srv = fk.serve_tiered(
+            prefix_depth=prefix_depth, compressed_engine=ce,
+            n_slots=n_slots, escalate_margin=escalate_margin,
+            fault_injector=injector,
+            retry=RetryPolicy(max_retries=2, backoff_s=0.001))
+        srv.serve(reqs[:4])                      # warm every tier/kind
+        t0 = time.perf_counter()
+        uids = [srv.submit(*r) for r in reqs]
+        srv.run_until_drained()
+        wall = time.perf_counter() - t0
+        lat = [srv._requests[u].latency_s for u in uids
+               if srv._requests[u].latency_s is not None]
+        return srv, uids, wall, float(np.percentile(lat, 95) * 1e3)
+
+    _, _, clean_wall, clean_p95 = _drain(None)
+    inj = FaultInjector(error_rate=error_rate, corrupt_rate=corrupt_rate,
+                        seed=seed, sleep=lambda s: None)
+    srv, uids, wall, p95 = _drain(inj)
+
+    # --- zero-silent-loss accounting ------------------------------------
+    lost = [u for u in uids if not srv._requests[u].done.is_set()]
+    unaccounted = [u for u in uids
+                   if srv._requests[u].result is None
+                   and not (srv._requests[u].shed or srv._requests[u].failed
+                            or srv._requests[u].timed_out)]
+    st = srv.stats()
+    rel = st["reliability"]
+    identities_ok = all(
+        s.faults == s.retries + s.failed_calls for s in srv._servers)
+    ist = inj.stats()
+    fault_rate = ist["injected"]["error"] / max(ist["calls"], 1)
+    out = {
+        "requests": len(uids),
+        "injected": ist["injected"],
+        "engine_calls": ist["calls"],
+        "injected_fault_rate": round(fault_rate, 4),
+        "faults": rel["faults"], "retries": rel["retries"],
+        "recovered_calls": rel["recovered_calls"],
+        "failed_calls": rel["failed_calls"],
+        "reroutes": rel["reroutes"], "recoveries": rel["recoveries"],
+        "terminal_failures": rel["failures"],
+        "lost_requests": len(lost),
+        "unaccounted_requests": len(unaccounted),
+        "accounting_identity_ok": identities_ok,
+        "clean_p95_ms": round(clean_p95, 2),
+        "chaos_p95_ms": round(p95, 2),
+        "p95_inflation": round(p95 / max(clean_p95, 1e-9), 2),
+        "clean_wall_s": round(clean_wall, 3),
+        "chaos_wall_s": round(wall, 3),
+        "breakers": {t: st["tiers"][t]["reliability"].get("breaker")
+                     for t in st["tiers"]},
+    }
+    print(f" chaos: {ist['injected']['error']} errors + "
+          f"{ist['injected']['corrupt']} corruptions over {ist['calls']} "
+          f"calls ({100 * fault_rate:.1f}%) | retries={rel['retries']} "
+          f"reroutes={rel['reroutes']} lost={len(lost)} "
+          f"p95 {clean_p95:.1f}ms -> {p95:.1f}ms "
+          f"({out['p95_inflation']}x)", flush=True)
+    if assert_chaos:
+        assert fault_rate >= 0.05, \
+            f"injected fault rate {fault_rate:.3f} below the 5% floor"
+        assert not lost, f"{len(lost)} admitted requests lost"
+        assert not unaccounted, \
+            f"{len(unaccounted)} requests finished with no result and no reason"
+        assert identities_ok, "faults != retries + failed_calls on some tier"
+        assert rel["recoveries"] + rel["recovered_calls"] > 0, \
+            "chaos run never exercised a recovery path"
+        assert out["p95_inflation"] <= max_p95_inflation, \
+            f"p95 inflated {out['p95_inflation']}x under faults " \
+            f"(bound {max_p95_inflation}x)"
+    return out
+
+
+def _snapshot_roundtrip(fk, Xte, ytr, fit_s: float,
+                        assert_conformant: bool = False) -> dict:
+    """Save → load → serve: the loaded engine must answer identically
+    without refitting (warm-start in seconds)."""
+    import os
+    import tempfile
+    C = fk.forest.n_classes_
+    batch = Xte[:64]
+    want = fk.engine.predict(ytr, n_classes=C, X=batch)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "kernel.npz")
+        t0 = time.perf_counter()
+        fk.save(path)
+        save_s = time.perf_counter() - t0
+        size = os.path.getsize(path)
+        t0 = time.perf_counter()
+        fk2 = ForestKernel.load(path)
+        load_s = time.perf_counter() - t0
+    got = fk2.engine.predict(ytr, n_classes=C, X=batch)
+    err = float(np.abs(want - got).max())
+    out = {"save_s": round(save_s, 3), "load_s": round(load_s, 3),
+           "fit_s": round(fit_s, 3), "bytes": int(size),
+           "warmstart_speedup": round(fit_s / max(load_s, 1e-9), 1),
+           "predict_max_abs_diff": err}
+    print(f" snapshot: save {save_s:.2f}s load {load_s:.2f}s "
+          f"({out['warmstart_speedup']}x vs {fit_s:.1f}s fit) "
+          f"{size >> 20}MiB  max|Δpredict|={err:.1e}", flush=True)
+    if assert_conformant:
+        assert err <= 1e-8, f"loaded engine diverges: {err:.2e}"
+        assert load_s < max(fit_s, 1.0), \
+            "snapshot load slower than refitting"
+    return out
+
+
 def run(n: int = 50_000, d: int = 20, trees: int = 50, backend: str = "auto",
         n_prototypes: int = 20, proto_k: int = 100, n_slots: int = 64,
         n_requests: int = 120, rows_per_request: int = 16,
@@ -195,7 +320,9 @@ def run(n: int = 50_000, d: int = 20, trees: int = 50, backend: str = "auto",
         escalate_margin: float = 0.2, sustained_rows: int = 8,
         sustained_slots: int = 128, sustained_prefix_depth: int = 6,
         sustained_duration_s: float = 10.0, ratio_target: float = 50.0,
-        assert_slo: bool = False,
+        assert_slo: bool = False, chaos: bool = True,
+        chaos_requests: int = 200, chaos_error_rate: float = 0.08,
+        assert_chaos: bool = False, snapshot: bool = True,
         out_path: str = "BENCH_serving_prox.json") -> dict:
     if backend == "auto":
         backend = "native" if _native.available() else "scipy"
@@ -251,6 +378,15 @@ def run(n: int = 50_000, d: int = 20, trees: int = 50, backend: str = "auto",
             duration_s=sustained_duration_s, ratio_target=ratio_target,
             escalate_margin=escalate_margin, n_slots=sustained_slots,
             prefix_depth=sustained_prefix_depth, assert_slo=assert_slo)
+    if chaos:
+        report["chaos"] = _chaos(
+            fk, ce, Xte, ytr, n_requests=chaos_requests,
+            error_rate=chaos_error_rate,
+            prefix_depth=sustained_prefix_depth,
+            escalate_margin=escalate_margin, assert_chaos=assert_chaos)
+    if snapshot:
+        report["snapshot"] = _snapshot_roundtrip(
+            fk, Xte, ytr, report["fit_s"], assert_conformant=assert_chaos)
     with open(out_path, "w") as fh:
         json.dump(report, fh, indent=2)
     return report
@@ -282,6 +418,17 @@ def main() -> None:
     ap.add_argument("--assert-slo", action="store_true",
                     help="fail unless p95<=SLO, zero sheds, and >=1 "
                          "escalation agreeing with the full-engine oracle")
+    ap.add_argument("--no-chaos", action="store_true",
+                    help="skip the fault-injection chaos mode")
+    ap.add_argument("--chaos-requests", type=int, default=200)
+    ap.add_argument("--chaos-error-rate", type=float, default=0.15)
+    ap.add_argument("--assert-chaos", action="store_true",
+                    help="fail unless >=5%% of calls fault, zero admitted "
+                         "requests are lost, recovery accounting balances, "
+                         "p95 inflation is bounded, and the snapshot "
+                         "round-trip is conformance-identical")
+    ap.add_argument("--no-snapshot", action="store_true",
+                    help="skip the snapshot save/load round-trip")
     ap.add_argument("--out", default="BENCH_serving_prox.json")
     args = ap.parse_args()
     run(n=args.n, d=args.d, trees=args.trees, backend=args.backend,
@@ -293,7 +440,11 @@ def main() -> None:
         sustained_slots=args.sustained_slots,
         sustained_prefix_depth=args.sustained_prefix_depth,
         sustained_duration_s=args.duration, ratio_target=args.ratio_target,
-        assert_slo=args.assert_slo, out_path=args.out)
+        assert_slo=args.assert_slo, chaos=not args.no_chaos,
+        chaos_requests=args.chaos_requests,
+        chaos_error_rate=args.chaos_error_rate,
+        assert_chaos=args.assert_chaos, snapshot=not args.no_snapshot,
+        out_path=args.out)
 
 
 if __name__ == "__main__":

@@ -88,6 +88,25 @@ class ForestKernel:
     def fit(self, X: np.ndarray, y: np.ndarray) -> "ForestKernel":
         return self.fit_forest(X, y).build_kernel_cache()
 
+    # ---------------- durable snapshots ----------------
+    def save(self, path) -> dict:
+        """Snapshot the fitted kernel (trees, binner, θ, weight factors) to
+        a single checksummed npz archive; see ``repro.core.snapshot``.
+        Returns the written manifest."""
+        from .snapshot import save_kernel
+        return save_kernel(self, path)
+
+    @classmethod
+    def load(cls, path, engine_backend: Optional[str] = None
+             ) -> "ForestKernel":
+        """Warm-start a ForestKernel from :meth:`save` output — validates
+        checksums/version, rebuilds the engine from the saved factors
+        (no refit, no weight recomputation), and verifies the result is
+        structurally identical to the saved engine.  ``engine_backend``
+        overrides the saved backend."""
+        from .snapshot import load_kernel
+        return load_kernel(path, engine_backend=engine_backend)
+
     # ---------------- maps ----------------
     def reference_map(self) -> sp.csr_matrix:
         return self.W_
@@ -203,7 +222,7 @@ class ForestKernel:
                      compressed_engine=None, n_prototypes: int = 10,
                      proto_k: int = 50, n_slots: int = 64,
                      escalate_margin: float = 0.1, clock=None,
-                     propagator=None, embedding=None):
+                     propagator=None, embedding=None, **reliability_kw):
         """A ``TieredProximityServer`` over the engine ladder
         shallow (depth-prefix) → prototype-compressed → full.
 
@@ -211,6 +230,9 @@ class ForestKernel:
         ``compressed_engine=None`` builds one via :meth:`compress`.
         ``propagate`` / ``embed`` requests (when enabled) route straight to
         the full tier — they are fitted against the full reference set.
+        Extra keyword arguments (``fault_injector``, ``retry``,
+        ``breaker_threshold``, ``spill_watermark``, ``adaptive_margin``,
+        ...) pass through to ``TieredProximityServer``.
         """
         import time as _time
         from ..serve.proximity import Tier, TieredProximityServer
@@ -238,7 +260,7 @@ class ForestKernel:
                           embedding=embedding))
         return TieredProximityServer(tiers, escalate_margin=escalate_margin,
                                      clock=_time.time if clock is None
-                                     else clock)
+                                     else clock, **reliability_kw)
 
     def prototypes(self, n_prototypes: int = 3, k: int = 50):
         """Greedy tree-space prototypes per class: (prototypes, coverage)."""

@@ -7,6 +7,7 @@ the training set, global leaf indexing, and the auxiliary statistics θ
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Optional
 
 import numpy as np
@@ -45,6 +46,25 @@ class EnsembleContext:
         """(N, T) int64 global leaf indices (tree-offset applied)."""
         lv = self.leaves if leaves is None else leaves
         return lv.astype(np.int64) + self.leaf_offset[None, :]
+
+    def digest(self) -> str:
+        """Structural sha256 of (T, θ): leaf codes, global indexing, masses,
+        in-bag state and tree weights.  Snapshot load rebuilds the context
+        from saved arrays and checks the digest recorded at save time, so a
+        warm-started engine is provably working from the same context."""
+        h = hashlib.sha256()
+        arrays = (self.leaves, self.leaf_offset, self.n_leaves,
+                  self.leaf_mass, self.leaf_mass_inbag, self.inbag,
+                  self.oob, self.oob_count, self.tree_weights)
+        h.update(str((self.total_leaves, self.n_train)).encode())
+        for a in arrays:
+            if a is None:
+                h.update(b"none")
+                continue
+            a = np.ascontiguousarray(a)
+            h.update(str((a.shape, a.dtype.str)).encode())
+            h.update(a.tobytes())
+        return h.hexdigest()
 
     @classmethod
     def from_forest(cls, forest: BaseForest, X: Optional[np.ndarray] = None,

@@ -74,7 +74,9 @@ class ProximityEngine:
 
     def __init__(self, ctx, assignment, forest=None, backend: str = "scipy",
                  dtype=np.float64, oos_cache_size: int = 8,
-                 ref_cache_size: int = 16):
+                 ref_cache_size: int = 16,
+                 factors: Optional[Tuple[np.ndarray,
+                                         Optional[np.ndarray]]] = None):
         if backend not in ENGINE_BACKENDS:
             raise ValueError(f"unknown engine backend {backend!r}; "
                              f"have {ENGINE_BACKENDS}")
@@ -90,15 +92,25 @@ class ProximityEngine:
         self.dtype = np.dtype(dtype)
         self.total_leaves = int(ctx.total_leaves)
 
-        # dense factors (device-ready; one build, reused by every op)
+        # dense factors (device-ready; one build, reused by every op).
+        # ``factors=(q, w)`` injects precomputed weight arrays — the
+        # snapshot warm-start path, which must not re-run the assignment's
+        # (possibly expensive) weight computation.
         self.gl = ctx.global_leaves()                        # (N, T) int64
-        self.q = np.ascontiguousarray(
-            assignment.query_weights(ctx.leaves), dtype=self.dtype)
-        if assignment.symmetric:
-            self.w = self.q
+        if factors is not None:
+            q, w = factors
+            self.q = np.ascontiguousarray(q, dtype=self.dtype)
+            self.w = self.q if (assignment.symmetric or w is None) else \
+                np.ascontiguousarray(w, dtype=self.dtype)
         else:
-            self.w = np.ascontiguousarray(
-                assignment.reference_weights(ctx.leaves), dtype=self.dtype)
+            self.q = np.ascontiguousarray(
+                assignment.query_weights(ctx.leaves), dtype=self.dtype)
+            if assignment.symmetric:
+                self.w = self.q
+            else:
+                self.w = np.ascontiguousarray(
+                    assignment.reference_weights(ctx.leaves),
+                    dtype=self.dtype)
 
         # CSR factors (scipy path + memory accounting)
         self.Q = build_leaf_map(self.gl, self.q, self.total_leaves, self.dtype)

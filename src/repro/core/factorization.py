@@ -11,6 +11,7 @@ P is never materialized.
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Optional, Tuple
 
 import numpy as np
@@ -19,7 +20,25 @@ from scipy.sparse.linalg import LinearOperator
 
 __all__ = ["full_kernel", "kernel_block", "kernel_matvec_operator",
            "proximity_predict", "topk_neighbors", "naive_swlc",
-           "prefix_leaf_contraction"]
+           "prefix_leaf_contraction", "factor_digest"]
+
+
+def factor_digest(gl: np.ndarray, q: np.ndarray,
+                  w: Optional[np.ndarray] = None) -> str:
+    """Structural sha256 of the factored form of P = Q Wᵀ.
+
+    Hashes shapes, dtypes and exact bytes of the dense factor arrays
+    (global leaves, query weights, reference weights when asymmetric), so
+    two engines with equal digests produce identical kernels on every
+    backend.  Snapshot load verifies the rebuilt engine against the digest
+    recorded at save time.
+    """
+    h = hashlib.sha256()
+    for a in (gl, q) + (() if w is None or w is q else (w,)):
+        a = np.ascontiguousarray(a)
+        h.update(str((a.shape, a.dtype.str)).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
 
 
 def full_kernel(Q: sp.csr_matrix, W: sp.csr_matrix,

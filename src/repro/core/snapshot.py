@@ -1,0 +1,183 @@
+"""Durable engine snapshots — warm-start serving without refitting.
+
+``save_kernel`` captures a fitted :class:`~repro.core.api.ForestKernel` as a
+single ``np.savez_compressed`` archive: the packed trees, binner edges,
+in-bag state, training references, routed training leaves, and the dense
+engine weight factors ``q``/``w``.  A JSON **manifest** (stored as a uint8
+array inside the archive) records the format name, a version field, the
+kernel config, a per-array sha256 checksum, and two structural digests:
+
+- ``ctx_digest``   — sha256 of the rebuilt ensemble context (T, θ),
+- ``factor_digest`` — sha256 of the dense factors of P = Q Wᵀ.
+
+``load_kernel`` verifies every checksum, rebuilds forest → context →
+engine, injects the saved weight factors (skipping the assignment's
+possibly-expensive weight computation — the point of warm-starting), and
+refuses to return an engine whose digests disagree with the save-time
+record.  A loaded kernel is therefore conformance-identical to the
+original on every backend: same leaves, same factors, bit-equal kernels.
+
+Failure modes all raise :class:`SnapshotError` with a reason: unknown
+format, version mismatch, missing arrays, checksum mismatch (corruption),
+digest mismatch (a rebuild that no longer reproduces the saved engine).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from typing import Optional
+
+import numpy as np
+
+from ..forest.trees import pack_trees, unpack_trees
+from ..forest.training import Binner
+from .context import EnsembleContext
+from .engine import ProximityEngine
+from .factorization import factor_digest
+from .weights import get_assignment
+
+__all__ = ["save_kernel", "load_kernel", "SnapshotError",
+           "SNAPSHOT_FORMAT", "SNAPSHOT_VERSION"]
+
+SNAPSHOT_FORMAT = "repro-forest-kernel"
+SNAPSHOT_VERSION = 1
+
+_TREE_KEYS = ("node_offset", "depth", "feature", "threshold", "left",
+              "right", "leaf_id", "value", "n_node_samples")
+
+
+class SnapshotError(RuntimeError):
+    """A snapshot failed validation (corruption, version, or digest)."""
+
+
+def _checksum(a: np.ndarray) -> str:
+    a = np.ascontiguousarray(a)
+    h = hashlib.sha256()
+    h.update(str((a.shape, a.dtype.str)).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def save_kernel(fk, path) -> dict:
+    """Write a fitted ForestKernel to ``path`` (npz).  Returns the manifest."""
+    if fk.engine is None or fk.forest is None or fk.ctx is None:
+        raise ValueError("fit the kernel before saving (engine is not built)")
+    forest, eng = fk.forest, fk.engine
+    binner = forest.binner_
+
+    arrays = {f"tree_{k}": v for k, v in pack_trees(forest.trees_).items()}
+    arrays["inbag"] = forest.inbag_
+    arrays["tree_weights"] = forest.tree_weights_
+    arrays["binner_edges_flat"] = binner.edges_flat
+    arrays["binner_edge_offset"] = binner.edge_offset
+    arrays["binner_edge_count"] = binner.edge_count
+    arrays["X"] = np.asarray(forest.X_, dtype=np.float64)
+    arrays["y"] = np.asarray(forest.y_)
+    arrays["leaves"] = np.ascontiguousarray(fk.ctx.leaves, dtype=np.int32)
+    arrays["factor_q"] = eng.q
+    if eng.w is not eng.q:
+        arrays["factor_w"] = eng.w
+
+    config = fk._config_kwargs()
+    config["dtype"] = np.dtype(config["dtype"]).name
+    manifest = {
+        "format": SNAPSHOT_FORMAT,
+        "version": SNAPSHOT_VERSION,
+        "config": config,
+        "n_classes": int(forest.n_classes_),
+        "base_score": (float(forest.base_score_)
+                       if hasattr(forest, "base_score_") else None),
+        "symmetric": bool(eng.w is eng.q),
+        "binner_n_bins": int(binner.n_bins),
+        "checksums": {k: _checksum(v) for k, v in arrays.items()},
+        "ctx_digest": fk.ctx.digest(),
+        "factor_digest": factor_digest(eng.gl, eng.q, eng.w),
+    }
+    arrays["manifest"] = np.frombuffer(
+        json.dumps(manifest).encode(), dtype=np.uint8)
+    np.savez_compressed(path, **arrays)
+    return manifest
+
+
+def load_kernel(path, engine_backend: Optional[str] = None):
+    """Rebuild a ForestKernel from ``save_kernel`` output.
+
+    ``engine_backend`` overrides the saved backend (e.g. a snapshot written
+    on a machine with the native kernels, loaded where only scipy runs).
+    Raises :class:`SnapshotError` on any validation failure.
+    """
+    from .api import ForestKernel, _MODEL_TYPES   # circular at module scope
+
+    try:
+        with np.load(path) as data:
+            if "manifest" not in data.files:
+                raise SnapshotError(f"{path}: no manifest — not a "
+                                    f"{SNAPSHOT_FORMAT} snapshot")
+            manifest = json.loads(bytes(data["manifest"].tobytes()).decode())
+            arrays = {k: data[k] for k in data.files if k != "manifest"}
+    except (OSError, ValueError, KeyError) as exc:
+        raise SnapshotError(f"{path}: unreadable snapshot ({exc})") from exc
+
+    if manifest.get("format") != SNAPSHOT_FORMAT:
+        raise SnapshotError(f"{path}: format {manifest.get('format')!r} != "
+                            f"{SNAPSHOT_FORMAT!r}")
+    if manifest.get("version") != SNAPSHOT_VERSION:
+        raise SnapshotError(
+            f"{path}: snapshot version {manifest.get('version')!r} not "
+            f"supported (have {SNAPSHOT_VERSION})")
+    for name, want in manifest["checksums"].items():
+        if name not in arrays:
+            raise SnapshotError(f"{path}: missing array {name!r}")
+        got = _checksum(arrays[name])
+        if got != want:
+            raise SnapshotError(f"{path}: checksum mismatch on {name!r} "
+                                "(corrupted snapshot)")
+
+    config = dict(manifest["config"])
+    config["dtype"] = np.dtype(config["dtype"]).type
+    if engine_backend is not None:
+        config["engine_backend"] = engine_backend
+    fk = ForestKernel(**config)
+
+    cls = _MODEL_TYPES[fk.model_type]
+    forest = cls(n_trees=fk.n_trees, max_depth=fk.max_depth,
+                 min_samples_leaf=fk.min_samples_leaf,
+                 max_features=fk.max_features, n_bins=fk.n_bins,
+                 task=fk.task, seed=fk.seed, n_jobs=fk.n_jobs,
+                 routing_backend=fk.routing_backend,
+                 tree_backend=fk.tree_backend)
+    forest.trees_ = unpack_trees({k: arrays[f"tree_{k}"]
+                                  for k in _TREE_KEYS})
+    forest.inbag_ = np.ascontiguousarray(arrays["inbag"], dtype=np.int32)
+    forest.n_classes_ = int(manifest["n_classes"])
+    forest.binner_ = Binner.from_state(
+        arrays["binner_edges_flat"], arrays["binner_edge_offset"],
+        arrays["binner_edge_count"], manifest["binner_n_bins"])
+    forest.X_ = arrays["X"]
+    forest.y_ = arrays["y"]
+    forest.tree_weights_ = np.asarray(arrays["tree_weights"],
+                                      dtype=np.float64)
+    if manifest.get("base_score") is not None and \
+            hasattr(forest, "base_score_"):
+        forest.base_score_ = float(manifest["base_score"])
+    forest._cache_tables()
+    fk.forest = forest
+
+    # saved leaves skip re-routing the training set; masses are cheap
+    ctx = EnsembleContext.from_forest(
+        forest, leaves=np.ascontiguousarray(arrays["leaves"],
+                                            dtype=np.int32))
+    if ctx.digest() != manifest["ctx_digest"]:
+        raise SnapshotError(f"{path}: rebuilt context digest mismatch")
+    fk.ctx = ctx
+    fk.assignment = get_assignment(fk.kernel_method, ctx)
+
+    w = arrays.get("factor_w")
+    fk.engine = ProximityEngine(ctx, fk.assignment, forest=forest,
+                                backend=fk.engine_backend, dtype=fk.dtype,
+                                factors=(arrays["factor_q"], w))
+    if factor_digest(fk.engine.gl, fk.engine.q,
+                     fk.engine.w) != manifest["factor_digest"]:
+        raise SnapshotError(f"{path}: rebuilt factor digest mismatch")
+    fk.Q_, fk.W_ = fk.engine.Q, fk.engine.W
+    return fk

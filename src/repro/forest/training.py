@@ -133,8 +133,12 @@ class Binner:
             [[0], np.cumsum(cnt)]).astype(np.int64)
         self.edges_flat = np.ascontiguousarray(Q.T[keep.T], dtype=np.float64)
         self.n_bins = int(max(2, cnt.max(initial=0) + 1))
-        # Padded (d, E) edge matrix for the one-pass transform; NaN pads
-        # never count in >= comparisons.
+        self._build_pad_edges()
+
+    def _build_pad_edges(self) -> None:
+        """Padded (d, E) edge matrix for the one-pass transform; NaN pads
+        never count in >= comparisons."""
+        d, cnt = len(self.edge_count), self.edge_count
         E = max(int(cnt.max(initial=0)), 1)
         pad = np.full((d, E), np.nan)
         if len(self.edges_flat):
@@ -143,6 +147,19 @@ class Binner:
                 self.edge_offset[:-1], cnt)
             pad[rr, cc] = self.edges_flat
         self._pad_edges = pad
+
+    @classmethod
+    def from_state(cls, edges_flat: np.ndarray, edge_offset: np.ndarray,
+                   edge_count: np.ndarray, n_bins: int) -> "Binner":
+        """Rebuild a fitted Binner from its saved edge arrays (snapshot
+        load path) — ``transform`` is bit-identical to the original."""
+        self = cls.__new__(cls)
+        self.edge_count = np.asarray(edge_count, dtype=np.int64)
+        self.edge_offset = np.asarray(edge_offset, dtype=np.int64)
+        self.edges_flat = np.ascontiguousarray(edges_flat, dtype=np.float64)
+        self.n_bins = int(n_bins)
+        self._build_pad_edges()
+        return self
 
     @property
     def edges(self) -> List[np.ndarray]:

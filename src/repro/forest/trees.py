@@ -27,7 +27,7 @@ import numpy as np
 
 __all__ = ["Tree", "TreeArrays", "route_tree", "route_forest_numpy",
            "route_forest_batched", "stack_leaf_values", "node_depths",
-           "truncate_tree", "prefix_leaf_map"]
+           "truncate_tree", "prefix_leaf_map", "pack_trees", "unpack_trees"]
 
 
 @dataclasses.dataclass
@@ -293,6 +293,57 @@ def prefix_leaf_map(tree: Tree, depth: int) -> np.ndarray:
         anc[sel] = anc[parent[sel]]
     leaf_nodes = tree.leaf_nodes()                    # ordered by leaf_id
     return ordinal[anc[leaf_nodes]].astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# snapshot (de)serialization
+# ---------------------------------------------------------------------------
+
+def pack_trees(trees: Sequence[Tree]) -> dict:
+    """Concatenate a fitted forest's trees into flat savez-able arrays.
+
+    All per-node arrays are concatenated in tree order with a ``(T+1,)``
+    ``node_offset`` prefix-sum delimiting each tree, plus ``(T,)`` depths.
+    ``unpack_trees(pack_trees(trees))`` reconstructs an equal forest.
+    """
+    counts = np.asarray([t.n_nodes for t in trees], dtype=np.int64)
+    return {
+        "node_offset": np.concatenate([[0], np.cumsum(counts)]),
+        "depth": np.asarray([t.depth for t in trees], dtype=np.int64),
+        "feature": np.concatenate([t.feature for t in trees]),
+        "threshold": np.concatenate([t.threshold for t in trees]),
+        "left": np.concatenate([t.left for t in trees]),
+        "right": np.concatenate([t.right for t in trees]),
+        "leaf_id": np.concatenate([t.leaf_id for t in trees]),
+        "value": np.concatenate([t.value for t in trees], axis=0),
+        "n_node_samples": np.concatenate([t.n_node_samples for t in trees]),
+    }
+
+
+def unpack_trees(arrays: dict) -> List["Tree"]:
+    """Inverse of :func:`pack_trees`."""
+    off = np.asarray(arrays["node_offset"], dtype=np.int64)
+    depth = np.asarray(arrays["depth"], dtype=np.int64)
+    out: List[Tree] = []
+    for t in range(len(depth)):
+        lo, hi = int(off[t]), int(off[t + 1])
+        out.append(Tree(
+            feature=np.ascontiguousarray(arrays["feature"][lo:hi],
+                                         dtype=np.int32),
+            threshold=np.ascontiguousarray(arrays["threshold"][lo:hi],
+                                           dtype=np.float32),
+            left=np.ascontiguousarray(arrays["left"][lo:hi], dtype=np.int32),
+            right=np.ascontiguousarray(arrays["right"][lo:hi],
+                                       dtype=np.int32),
+            leaf_id=np.ascontiguousarray(arrays["leaf_id"][lo:hi],
+                                         dtype=np.int32),
+            value=np.ascontiguousarray(arrays["value"][lo:hi],
+                                       dtype=np.float32),
+            n_node_samples=np.ascontiguousarray(
+                arrays["n_node_samples"][lo:hi], dtype=np.int32),
+            depth=int(depth[t]),
+        ))
+    return out
 
 
 def stack_leaf_values(trees: Sequence[Tree]) -> np.ndarray:

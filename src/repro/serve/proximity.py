@@ -49,6 +49,23 @@ thread and one worker thread per tier run the loops, so a slow full-engine
 tick never blocks the compressed tier; the same logic runs synchronously
 (``run_until_drained``) for deterministic tests.
 
+Reliability
+-----------
+Engine calls run under a **supervisor**: an optional seeded
+:class:`~repro.serve.reliability.FaultInjector` is consulted around every
+call (synthetic exceptions / latency / corrupted buffers), results are
+validated finite, failures are retried under a bounded
+:class:`~repro.serve.reliability.RetryPolicy` with backoff, and repeated
+faults trip a per-server :class:`~repro.serve.reliability.CircuitBreaker`.
+A request whose call fails terminally is never silently dropped — it lands
+in ``failed_requests`` with a recorded reason, and the tiered server
+re-routes it **down-ladder** to the next capable tier.  Tiers also carry
+deadline *budgets* (a request whose remaining deadline cannot afford the
+cheap tier plus a possible escalation hop routes straight to a deeper
+tier) and overload *spill* watermarks (a tier whose queue exceeds the
+watermark passes new work down-ladder instead of queuing it toward a
+shed).  All of it is visible in ``stats()``.
+
 The slot buffer is host-owned and mutated on admission; engine calls get a
 defensive copy (`PR-1 async buffer-aliasing race
 <../serve/engine.py>`: zero-copy ``jnp.asarray`` of a mutated numpy buffer
@@ -66,6 +83,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.engine import prediction_margin
+from .reliability import (CircuitBreaker, CorruptedResult, FaultInjector,
+                          RetryPolicy, validate_finite)
 
 __all__ = ["ProxRequest", "ProximityServer", "TieredProximityServer",
            "Tier", "TieredRequest", "KINDS"]
@@ -90,6 +109,9 @@ class ProxRequest:
     admitted_at: Optional[float] = None
     done_at: Optional[float] = None
     shed: bool = False
+    failed: bool = False                   # engine fault after all retries
+    fail_reason: Optional[str] = None
+    attempts: int = 0                      # extra engine-call attempts spent
     result: Any = None
 
     @property
@@ -128,11 +150,24 @@ class ProximityServer:
     n_classes : class count (default ``y.max() + 1``).
     clock : injectable time source for deadline semantics (default
         ``time.time``); deterministic tests pass a fake.
+    fault_injector : optional ``FaultInjector`` consulted around every
+        engine call (chaos testing / benchmarking).
+    retry : ``RetryPolicy`` for failed engine calls (default: 2 retries
+        with 10 ms exponential backoff).  Pass ``RetryPolicy(max_retries=0)``
+        to fail fast.
+    breaker : optional ``CircuitBreaker``; while open, engine calls are
+        skipped and active requests fail fast with reason
+        ``"breaker_open"`` (the tiered server re-routes them down-ladder).
+    name : label used in fault-injection scoping and failure reasons.
     """
 
     def __init__(self, engine, y: Optional[np.ndarray] = None,
                  n_slots: int = 64, n_classes: Optional[int] = None,
-                 propagator=None, embedding=None, clock=time.time):
+                 propagator=None, embedding=None, clock=time.time,
+                 fault_injector: Optional[FaultInjector] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 breaker: Optional[CircuitBreaker] = None,
+                 name: Optional[str] = None):
         self.engine = engine
         self.y = None if y is None else np.asarray(y, dtype=np.int64)
         if n_classes is None and self.y is not None and len(self.y):
@@ -142,6 +177,10 @@ class ProximityServer:
         self.propagator = propagator
         self.embedding = embedding
         self._clock = clock
+        self.name = name
+        self.fault_injector = fault_injector
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.breaker = breaker
 
         self._slot_X: Optional[np.ndarray] = None    # (n_slots, d), lazy
         self._slot_free: List[int] = list(range(self.n_slots))
@@ -149,10 +188,18 @@ class ProximityServer:
         self.queue: "deque[ProxRequest]" = deque()
         self.finished: List[ProxRequest] = []
         self.shed_requests: List[ProxRequest] = []
+        self.failed_requests: List[ProxRequest] = []
         self._uids = itertools.count()
         self.ticks = 0
         self.rows_served = 0
         self._occupancy: List[int] = []
+        # reliability accounting: every engine-call exception is a fault,
+        # and each fault is either retried or terminal, so
+        # faults == retries + failed_calls always holds (tested)
+        self.faults = 0            # engine-call exceptions observed
+        self.retries = 0           # faults answered with a re-attempt
+        self.failed_calls = 0      # faults that exhausted the retry budget
+        self.recovered_calls = 0   # calls that succeeded after >=1 fault
 
     # ---------------- public API ----------------
     def submit(self, kind: str, X: np.ndarray, k: int = 10,
@@ -202,6 +249,15 @@ class ProximityServer:
         self._admit()
         if not self.active:
             return 0
+        if self.breaker is not None and not self.breaker.allow():
+            # open breaker: fail fast with a recorded reason rather than
+            # burning retries against an engine that keeps crashing (the
+            # tiered server re-routes these down-ladder)
+            failed = 0
+            for req in list(self.active.values()):
+                self._fail_request(req, "breaker_open")
+                failed += 1
+            return failed
         self.ticks += 1
         self._occupancy.append(self.n_slots - len(self._slot_free))
 
@@ -218,7 +274,7 @@ class ProximityServer:
         for req in self.active.values():
             by_kind.setdefault(req.kind, []).append(req)
         for kind, reqs in by_kind.items():
-            self._run_kind(kind, reqs, X_tick, pos)
+            self._supervised_kind(kind, reqs, X_tick, pos)
 
         retired = 0
         now = self._clock()
@@ -273,11 +329,53 @@ class ProximityServer:
             self._slot_X[slots] = req.X
             self.active[req.uid] = req
 
-    def _run_kind(self, kind: str, reqs: List[ProxRequest],
-                  X_tick: np.ndarray, pos: Dict[int, int]) -> None:
+    def _supervised_kind(self, kind: str, reqs: List[ProxRequest],
+                         X_tick: np.ndarray, pos: Dict[int, int]) -> None:
+        """Run one kind's engine call under the supervisor: fault
+        injection, finite validation, bounded retry-with-backoff, breaker
+        accounting.  On terminal failure the kind's requests land in
+        ``failed_requests`` with a reason — never silently dropped."""
+        arrays = None
+        err: Optional[BaseException] = None
+        for attempt in range(self.retry.max_retries + 1):
+            try:
+                arrays = self._compute_kind(kind, reqs, X_tick)
+                break
+            except Exception as exc:          # noqa: BLE001 — supervisor
+                self.faults += 1
+                err = exc
+                if self.breaker is not None:
+                    self.breaker.record_failure()
+                if attempt < self.retry.max_retries and (
+                        self.breaker is None or self.breaker.allow()):
+                    self.retries += 1
+                    for r in reqs:
+                        r.attempts += 1
+                    self.retry.backoff(attempt + 1)
+                else:
+                    self.failed_calls += 1
+                    break
+        if arrays is None:
+            reason = f"{type(err).__name__}: {err}"
+            for req in reqs:
+                self._fail_request(req, reason)
+            return
+        if self.breaker is not None:
+            self.breaker.record_success()
+        if err is not None:
+            self.recovered_calls += 1
+        self._assign_results(kind, reqs, arrays, pos)
+
+    def _compute_kind(self, kind: str, reqs: List[ProxRequest],
+                      X_tick: np.ndarray) -> Tuple[np.ndarray, ...]:
+        """The engine call for one kind — everything that can fault."""
+        inj = self.fault_injector
+        if inj is not None:
+            inj.before_call(kind, self.name)
         eng = self.engine
         if kind == "predict":
-            scores = eng.predict(self.y, n_classes=self.n_classes, X=X_tick)
+            arrays = (eng.predict(self.y, n_classes=self.n_classes,
+                                  X=X_tick),)
         elif kind == "topk":
             kk = max(r.k for r in reqs)
             idx, val = eng.topk(k=kk, X=X_tick)
@@ -288,28 +386,52 @@ class ProximityServer:
                 # not neighbors — mark them -1 instead of fabricating the
                 # training row behind column 0
                 idx = np.where(val > 0, cols[idx], -1)
+            arrays = (idx, val)
         elif kind == "outlier":
             from ..applications.outliers import oos_outlier_scores
-            scores = oos_outlier_scores(eng, self.y, X_tick)
+            arrays = (oos_outlier_scores(eng, self.y, X_tick),)
         elif kind == "propagate":
             _, scores = self.propagator.partial_fit(X_tick)
+            arrays = (scores,)
         else:                        # embed
-            scores = self.embedding.transform(X_tick)
+            arrays = (self.embedding.transform(X_tick),)
+        if inj is not None:
+            arrays = inj.corrupt(kind, arrays, self.name)
+        validate_finite(kind, arrays)
+        return arrays
+
+    def _assign_results(self, kind: str, reqs: List[ProxRequest],
+                        arrays: Tuple[np.ndarray, ...],
+                        pos: Dict[int, int]) -> None:
+        """Slice the kind-level result buffers into per-request results
+        (pure — runs exactly once, after the supervised call succeeds)."""
         for req in reqs:
             take = np.asarray([pos[int(s)] for s in req.slots])
             if kind == "predict":
-                s = scores[take]
+                s = arrays[0][take]
                 req.result = {"scores": s, "labels": s.argmax(axis=1)}
             elif kind == "topk":
+                idx, val = arrays
                 req.result = {"indices": idx[take, :req.k],
                               "values": val[take, :req.k]}
             elif kind == "propagate":
-                s = scores[take]
+                s = arrays[0][take]
                 req.result = {"scores": s, "labels": s.argmax(axis=1)}
             elif kind == "outlier":
-                req.result = {"scores": scores[take]}
+                req.result = {"scores": arrays[0][take]}
             else:
-                req.result = {"embedding": scores[take]}
+                req.result = {"embedding": arrays[0][take]}
+
+    def _fail_request(self, req: ProxRequest, reason: str) -> None:
+        """Terminal failure: free the slots, record the reason, surface the
+        request in ``failed_requests`` (the tiered server re-routes it)."""
+        req.failed = True
+        req.fail_reason = reason
+        req.done_at = self._clock()
+        if req.slots is not None:
+            self._slot_free.extend(int(s) for s in req.slots)
+        self.failed_requests.append(req)
+        del self.active[req.uid]
 
     # ---------------- accounting ----------------
     def stats(self) -> Dict[str, Any]:
@@ -323,6 +445,17 @@ class ProximityServer:
             "queue_depth": len(self.queue),
             "shed": len(self.shed_requests),
         }
+        out["reliability"] = {
+            "faults": self.faults,
+            "retries": self.retries,
+            "recovered_calls": self.recovered_calls,
+            "failed_calls": self.failed_calls,
+            "failed_requests": len(self.failed_requests),
+        }
+        if self.breaker is not None:
+            out["reliability"]["breaker"] = self.breaker.snapshot()
+        if self.fault_injector is not None:
+            out["reliability"]["injected"] = self.fault_injector.stats()
         hits = int(getattr(self.engine, "qs_cache_hits", 0))
         misses = int(getattr(self.engine, "qs_cache_misses", 0))
         out["qs_cache"] = {
@@ -362,6 +495,14 @@ class Tier:
     ``kinds`` declares what this tier can answer; kinds absent here route
     past it at admission (e.g. a compressed tier cannot serve ``propagate``
     / ``embed``, which are fitted against the full reference set).
+
+    ``budget_s`` is the tier's deadline budget — the service time a request
+    should expect here.  When unset it is learned online (EWMA of observed
+    tier latency).  A request whose remaining deadline cannot afford this
+    tier's budget *plus* a possible escalation hop routes straight to a
+    deeper tier at admission.  ``spill_watermark`` bounds the tier's queue:
+    beyond it, new work spills to the next capable tier instead of queuing
+    toward a deadline shed.
     """
 
     name: str
@@ -372,6 +513,8 @@ class Tier:
     n_classes: Optional[int] = None
     propagator: object = None
     embedding: object = None
+    budget_s: Optional[float] = None
+    spill_watermark: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -393,6 +536,9 @@ class TieredRequest:
     escalations: int = 0
     shed: bool = False
     timed_out: bool = False
+    failed: bool = False                   # no tier could answer (faults)
+    fail_reason: Optional[str] = None      # last recorded engine fault
+    reroutes: int = 0                      # fault-driven down-ladder hops
     done_at: Optional[float] = None
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
 
@@ -418,20 +564,54 @@ class TieredProximityServer:
     per-tier lock — a slow full-engine tick never blocks the compressed
     tier's loop.  The identical logic runs synchronously via
     ``run_until_drained`` for deterministic tests.
+
+    Reliability (see module docstring): each tier's worker runs its engine
+    calls under a supervisor with retry/backoff and a per-tier circuit
+    breaker; a tier that fails a request terminally (or whose breaker is
+    open) has that request **re-routed down-ladder** to the next capable
+    tier, so no admitted request is ever lost — a request only fails
+    terminally when every capable tier has faulted on it, and then with a
+    recorded reason.  Over-watermark queues spill down-ladder, and deadline
+    budgets route hopeless escalation candidates straight to a deeper
+    tier.  ``adaptive_margin=True`` calibrates the escalation threshold
+    from observed escalated-vs-shallow agreement in a sliding window
+    (targeting ``margin_target`` agreement above the threshold); the
+    default keeps the fixed ``escalate_margin``.
     """
 
     def __init__(self, tiers: Sequence[Tier], escalate_margin: float = 0.1,
-                 clock=time.time):
+                 clock=time.time,
+                 fault_injector: Optional[FaultInjector] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 breaker_threshold: int = 5,
+                 breaker_cooldown_s: float = 1.0,
+                 spill_watermark: Optional[int] = None,
+                 adaptive_margin: bool = False,
+                 margin_window: int = 256,
+                 margin_target: float = 0.95):
         if not tiers:
             raise ValueError("need at least one tier")
         self.tiers = list(tiers)
         self.escalate_margin = float(escalate_margin)
         self._clock = clock
+        self.spill_watermark = spill_watermark
+        self.adaptive_margin = bool(adaptive_margin)
+        self.margin_target = float(margin_target)
+        self._margin_obs: "deque[Tuple[float, bool]]" = \
+            deque(maxlen=int(margin_window))
+        self._margin_min = max(8, int(margin_window) // 8)
+        self._margin_lock = threading.Lock()
+        self._breakers = [
+            CircuitBreaker(fail_threshold=breaker_threshold,
+                           cooldown_s=breaker_cooldown_s, clock=clock)
+            for _ in self.tiers]
         self._servers = [
             ProximityServer(t.engine, y=t.y, n_slots=t.n_slots,
                             n_classes=t.n_classes, propagator=t.propagator,
-                            embedding=t.embedding, clock=clock)
-            for t in self.tiers]
+                            embedding=t.embedding, clock=clock,
+                            fault_injector=fault_injector, retry=retry,
+                            breaker=self._breakers[i], name=t.name)
+            for i, t in enumerate(self.tiers)]
         # pre-warm lazy routing tables so worker threads never race the
         # first build of TreeArrays._flat
         for t in self.tiers:
@@ -449,16 +629,28 @@ class TieredProximityServer:
             [{} for _ in self.tiers]
         self._seen_finished = [0] * len(self.tiers)
         self._seen_shed = [0] * len(self.tiers)
+        self._seen_failed = [0] * len(self.tiers)
         self.finished: List[TieredRequest] = []
         self._finished_lock = threading.Lock()
 
         self.escalations = 0
         self.sheds = 0
         self.timeouts = 0
+        self.spills = 0            # watermark-driven down-ladder hops
+        self.reroutes = 0          # fault-driven down-ladder hops
+        self.failures = 0          # requests no tier could answer
+        self.recoveries = 0        # requests answered despite a fault
+        self.budget_skips = 0      # tiers skipped for deadline budget
+        self.worker_crashes = 0    # worker-loop exceptions survived
+        self.worker_restarts = 0   # dead worker threads respawned
         self._tier_requests = [0] * len(self.tiers)
+        # EWMA of observed per-tier request latency, feeding deadline
+        # budgets when Tier.budget_s is unset
+        self._tier_lat: List[Optional[float]] = [None] * len(self.tiers)
 
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
+        self._worker_threads: Dict[int, threading.Thread] = {}
 
     # ---------------- submission / routing ----------------
     def _tier_for(self, kind: str, n_rows: int,
@@ -501,6 +693,48 @@ class TieredProximityServer:
             self._inbox.append(treq)
         return treq.uid
 
+    def _budget(self, i: int) -> float:
+        """Tier i's deadline budget: fixed ``Tier.budget_s`` when set, else
+        the learned EWMA of observed tier latency (0 until first sample)."""
+        b = self.tiers[i].budget_s
+        if b is not None:
+            return float(b)
+        lat = self._tier_lat[i]
+        return 0.0 if lat is None else float(lat)
+
+    def _route_tier(self, treq: TieredRequest) -> int:
+        """Admission tier choice: cheapest capable tier, adjusted for
+        deadline budgets (skip tiers the remaining deadline can't afford,
+        escalation hop included) and open circuit breakers (route around a
+        tripped tier when a deeper capable one exists)."""
+        kind, n_rows = treq.kind, treq.X.shape[0]
+        i = self._tier_for(kind, n_rows)
+        last = self._last_tier_for(kind, n_rows)
+        if treq.deadline_at is not None and i is not None \
+                and last is not None:
+            remaining = treq.deadline_at - self._clock()
+            while i is not None and i < last:
+                # answering here must leave room for a possible escalation
+                # hop to the deepest capable tier
+                hop = self._budget(last) if (
+                    kind == "predict" and self.escalate_margin > 0) else 0.0
+                need = self._budget(i) + hop
+                if need > 0 and remaining < need:
+                    self.budget_skips += 1
+                    i = self._tier_for(kind, n_rows, after=i)
+                else:
+                    break
+            if i is None:
+                i = last        # deepest tier is the last resort, always
+        while i is not None and last is not None and i < last:
+            if self._breakers[i].allow():
+                break
+            nxt = self._tier_for(kind, n_rows, after=i)
+            if nxt is None:
+                break
+            i = nxt
+        return i
+
     def _route_inbox(self) -> int:
         routed = 0
         while True:
@@ -508,11 +742,25 @@ class TieredProximityServer:
                 if not self._inbox:
                     return routed
                 treq = self._inbox.popleft()
-            i = self._tier_for(treq.kind, treq.X.shape[0])
-            self._enqueue(i, treq)
+            self._enqueue(self._route_tier(treq), treq)
             routed += 1
 
     def _enqueue(self, i: int, treq: TieredRequest) -> None:
+        wm = self.tiers[i].spill_watermark
+        if wm is None:
+            wm = self.spill_watermark
+        if wm is not None:
+            nxt = self._tier_for(treq.kind, treq.X.shape[0], after=i)
+            if nxt is not None:
+                with self._locks[i]:
+                    depth = len(self._servers[i].queue)
+                if depth >= wm:
+                    # overload spill: degrade to the next capable tier
+                    # instead of queuing toward a deadline shed (the
+                    # deepest capable tier always accepts)
+                    self.spills += 1
+                    self._enqueue(nxt, treq)
+                    return
         with self._locks[i]:
             inner_uid = self._servers[i].submit(
                 treq.kind, treq.X, k=treq.k, priority=treq.priority,
@@ -522,27 +770,31 @@ class TieredProximityServer:
             treq.tier_path.append(self.tiers[i].name)
 
     # ---------------- completion / escalation ----------------
-    def _collect(self, i: int) -> List[Tuple[ProxRequest, bool]]:
-        """Newly finished/shed inner requests of tier i (caller need not
-        hold the tier lock; lists are append-only and indices monotone)."""
+    def _collect(self, i: int) -> List[Tuple[ProxRequest, str]]:
+        """Newly finished/shed/failed inner requests of tier i (caller need
+        not hold the tier lock; lists are append-only, indices monotone)."""
         srv = self._servers[i]
-        out: List[Tuple[ProxRequest, bool]] = []
+        out: List[Tuple[ProxRequest, str]] = []
         fin = srv.finished
         while self._seen_finished[i] < len(fin):
-            out.append((fin[self._seen_finished[i]], False))
+            out.append((fin[self._seen_finished[i]], "done"))
             self._seen_finished[i] += 1
         sh = srv.shed_requests
         while self._seen_shed[i] < len(sh):
-            out.append((sh[self._seen_shed[i]], True))
+            out.append((sh[self._seen_shed[i]], "shed"))
             self._seen_shed[i] += 1
+        fl = srv.failed_requests
+        while self._seen_failed[i] < len(fl):
+            out.append((fl[self._seen_failed[i]], "failed"))
+            self._seen_failed[i] += 1
         return out
 
-    def _settle(self, i: int, inner: ProxRequest, was_shed: bool) -> None:
+    def _settle(self, i: int, inner: ProxRequest, status: str) -> None:
         treq = self._pending[i].pop(inner.uid, None)
         if treq is None:
             return
         tname = self.tiers[i].name
-        if was_shed:
+        if status == "shed":
             if treq.answers:
                 # past deadline with an earlier tier's answer in hand:
                 # answer from the best tier already available
@@ -554,12 +806,35 @@ class TieredProximityServer:
                 self.sheds += 1
                 self._finalize(treq, best=False)
             return
+        if status == "failed":
+            # tier faulted on this request past its retry budget (or its
+            # breaker is open): re-route down-ladder rather than lose it
+            treq.fail_reason = inner.fail_reason
+            nxt = self._tier_for(treq.kind, treq.X.shape[0], after=i)
+            if nxt is not None:
+                treq.reroutes += 1
+                self.reroutes += 1
+                self._enqueue(nxt, treq)
+                return
+            if treq.answers:
+                self._finalize(treq, best=True)
+            else:
+                treq.failed = True
+                self.failures += 1
+                self._finalize(treq, best=False)
+            return
+        if self._tier_lat[i] is None:
+            self._tier_lat[i] = inner.latency_s
+        elif inner.latency_s is not None:
+            self._tier_lat[i] = 0.8 * self._tier_lat[i] + \
+                0.2 * inner.latency_s
+        self._record_agreement(treq, tname, inner.result)
         treq.answers[tname] = inner.result
         nxt = self._last_tier_for(treq.kind, treq.X.shape[0], after=i)
         if (treq.kind == "predict" and nxt is not None
                 and self.escalate_margin > 0):
             margin = prediction_margin(inner.result["scores"])
-            if margin.size and float(margin.min()) < self.escalate_margin:
+            if margin.size and float(margin.min()) < self._live_margin():
                 if treq.deadline_at is None or \
                         self._clock() <= treq.deadline_at:
                     treq.escalations += 1
@@ -570,6 +845,48 @@ class TieredProximityServer:
                 self.timeouts += 1
         self._finalize(treq, best=True)
 
+    # ---------------- adaptive escalation margin ----------------
+    def _record_agreement(self, treq: TieredRequest, tname: str,
+                          result: Any) -> None:
+        """Feed the calibration window when an escalated ``predict``
+        settles: pair each row's *shallow* margin with whether the deeper
+        tier agreed on its label."""
+        if not self.adaptive_margin or treq.kind != "predict" \
+                or not treq.escalations or not isinstance(result, dict):
+            return
+        prev = None
+        for name in treq.tier_path:
+            if name != tname and name in treq.answers:
+                prev = treq.answers[name]
+                break
+        if not isinstance(prev, dict) or "scores" not in prev:
+            return
+        pm = prediction_margin(prev["scores"])
+        agree = np.asarray(prev["labels"]) == np.asarray(result["labels"])
+        with self._margin_lock:
+            for m, a in zip(pm, agree):
+                self._margin_obs.append((float(m), bool(a)))
+
+    def _live_margin(self) -> float:
+        """Current escalation threshold.  Fixed ``escalate_margin`` unless
+        adaptive mode has enough observations; then the smallest shallow
+        margin whose above-threshold agreement with the deep tier still
+        meets ``margin_target`` (escalate-everything fallback when even
+        confident answers disagree)."""
+        if not self.adaptive_margin:
+            return self.escalate_margin
+        with self._margin_lock:
+            if len(self._margin_obs) < self._margin_min:
+                return self.escalate_margin
+            obs = sorted(self._margin_obs, key=lambda t: -t[0])
+        agreed = 0
+        best = float(obs[0][0])     # nothing qualifies -> escalate all
+        for n, (m, a) in enumerate(obs, 1):
+            agreed += a
+            if agreed / n >= self.margin_target:
+                best = m
+        return float(best)
+
     def _finalize(self, treq: TieredRequest, best: bool) -> None:
         if best and treq.tier_path:
             # deepest tier that answered (tier_path order = ladder order)
@@ -578,6 +895,8 @@ class TieredProximityServer:
                     treq.final_tier = name
                     treq.result = treq.answers[name]
                     break
+        if treq.fail_reason is not None and treq.result is not None:
+            self.recoveries += 1    # answered despite an engine fault
         treq.done_at = self._clock()
         with self._finished_lock:
             self.finished.append(treq)
@@ -593,8 +912,8 @@ class TieredProximityServer:
             while srv.queue or srv.active:
                 srv.step()
                 busy = True
-        for inner, was_shed in self._collect(i):
-            self._settle(i, inner, was_shed)
+        for inner, status in self._collect(i):
+            self._settle(i, inner, status)
             busy = True
         return busy
 
@@ -625,9 +944,10 @@ class TieredProximityServer:
         self._threads.append(threading.Thread(
             target=self._admission_loop, name="prox-admit", daemon=True))
         for i in range(len(self.tiers)):
-            self._threads.append(threading.Thread(
+            self._worker_threads[i] = threading.Thread(
                 target=self._worker_loop, args=(i,),
-                name=f"prox-tier-{self.tiers[i].name}", daemon=True))
+                name=f"prox-tier-{self.tiers[i].name}", daemon=True)
+            self._threads.append(self._worker_threads[i])
         for t in self._threads:
             t.start()
         return self
@@ -647,19 +967,43 @@ class TieredProximityServer:
 
     def _admission_loop(self) -> None:
         while not self._stop.is_set():
+            self._respawn_dead_workers()
             if self._route_inbox() == 0:
                 time.sleep(0.0005)
+
+    def _respawn_dead_workers(self) -> None:
+        """Supervision of the worker threads themselves: a worker that died
+        (anything escaping the in-loop crash guard) is restarted so its
+        tier keeps draining."""
+        for i, t in list(self._worker_threads.items()):
+            # ident is None until a thread has actually started — don't
+            # "respawn" workers start() hasn't launched yet
+            if t.ident is None or t.is_alive() or self._stop.is_set():
+                continue
+            self.worker_restarts += 1
+            nt = threading.Thread(
+                target=self._worker_loop, args=(i,),
+                name=f"prox-tier-{self.tiers[i].name}-r{self.worker_restarts}",
+                daemon=True)
+            self._worker_threads[i] = nt
+            self._threads.append(nt)
+            nt.start()
 
     def _worker_loop(self, i: int) -> None:
         srv = self._servers[i]
         while not self._stop.is_set():
-            with self._locks[i]:
-                retired = srv.step() if (srv.queue or srv.active) else 0
-                idle = not (srv.queue or srv.active)
-            settled = 0
-            for inner, was_shed in self._collect(i):
-                self._settle(i, inner, was_shed)
-                settled += 1
+            try:
+                with self._locks[i]:
+                    retired = srv.step() if (srv.queue or srv.active) else 0
+                    idle = not (srv.queue or srv.active)
+                settled = 0
+                for inner, status in self._collect(i):
+                    self._settle(i, inner, status)
+                    settled += 1
+            except Exception:       # noqa: BLE001 — worker must survive
+                self.worker_crashes += 1
+                time.sleep(0.001)
+                continue
             if retired == 0 and settled == 0 and idle:
                 time.sleep(0.0005)
 
@@ -676,10 +1020,27 @@ class TieredProximityServer:
             "escalation_rate": self.escalations / max(predicts, 1),
             "shed": self.sheds,
             "timeouts": self.timeouts,
+            "live_margin": self._live_margin(),
+            "reliability": {
+                "faults": sum(s.faults for s in self._servers),
+                "retries": sum(s.retries for s in self._servers),
+                "recovered_calls": sum(s.recovered_calls
+                                       for s in self._servers),
+                "failed_calls": sum(s.failed_calls for s in self._servers),
+                "spills": self.spills,
+                "reroutes": self.reroutes,
+                "recoveries": self.recoveries,
+                "failures": self.failures,
+                "budget_skips": self.budget_skips,
+                "worker_crashes": self.worker_crashes,
+                "worker_restarts": self.worker_restarts,
+            },
             "tiers": {},
         }
         for i, t in enumerate(self.tiers):
             st = self._servers[i].stats()
             st["routed_requests"] = self._tier_requests[i]
+            st["budget_s"] = self._budget(i)
+            st["reliability"]["breaker"] = self._breakers[i].snapshot()
             out["tiers"][t.name] = st
         return out

@@ -106,10 +106,13 @@ def train_with_recovery(step_fn: Callable, state, batches,
     for step in range(start_step, len(batches)):
         if fail_at is not None and step == fail_at:
             raise RuntimeError(f"simulated node failure at step {step}")
-        t0 = time.monotonic()
+        # step timing goes through the monitor's clock so recovery runs are
+        # deterministically testable with a fake clock (no real sleeps)
+        clock = time.monotonic if monitor is None else monitor.clock
+        t0 = clock()
         state, metrics = step_fn(state, batches[step])
         if monitor is not None:
-            monitor.beat(0, time.monotonic() - t0)
+            monitor.beat(0, clock() - t0)
         metrics_hist.append({k: float(v) for k, v in metrics.items()})
         if (step + 1) % save_every == 0:
             save_checkpoint(ckpt_dir, step + 1, state)

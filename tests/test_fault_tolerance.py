@@ -1,0 +1,79 @@
+"""Recovery-loop timing goes through the monitor's injectable clock, so
+heartbeat ages and step durations are deterministic — no real sleeps.
+"""
+import numpy as np
+import pytest
+
+from repro.train.fault_tolerance import HeartbeatMonitor, train_with_recovery
+
+
+def _ticking_clock():
+    t = [0.0]
+
+    def clock():
+        return t[0]
+
+    clock.t = t
+    return clock
+
+
+def test_recovery_loop_times_steps_with_monitor_clock(tmp_path):
+    clock = _ticking_clock()
+    mon = HeartbeatMonitor(n_hosts=1, slack=2.0, timeout=50.0, clock=clock)
+
+    def step_fn(state, batch):
+        # synthetic per-step cost: 1s base + 0.5s per batch index
+        clock.t[0] += 1.0 + 0.5 * batch
+        return state + 1, {"loss": float(batch)}
+
+    state, hist = train_with_recovery(step_fn, 0, list(range(6)),
+                                      str(tmp_path), save_every=100,
+                                      monitor=mon)
+    assert state == 6 and len(hist) == 6
+    # beat durations are exactly the fake-clock deltas, not wall time
+    np.testing.assert_allclose(mon.step_times[0],
+                               [1.0 + 0.5 * b for b in range(6)])
+    assert mon.dead() == []
+    clock.t[0] += 51.0
+    assert mon.dead() == [0]
+
+
+def test_recovery_loop_straggler_detection_deterministic(tmp_path):
+    clock = _ticking_clock()
+    mon = HeartbeatMonitor(n_hosts=3, slack=2.0, timeout=1e9, clock=clock)
+
+    def step_fn(state, batch):
+        clock.t[0] += 1.0
+        return state + 1, {"loss": 0.0}
+
+    train_with_recovery(step_fn, 0, list(range(8)), str(tmp_path),
+                        save_every=100, monitor=mon)
+    # host 1 keeps pace with host 0; host 2 runs 5x the fleet median
+    for _ in range(8):
+        mon.beat(1, 1.0)
+        mon.beat(2, 5.0)
+    assert mon.stragglers() == [2]
+
+
+def test_recovery_loop_resume_consumes_skipped_batches(tmp_path):
+    clock = _ticking_clock()
+    mon = HeartbeatMonitor(n_hosts=1, timeout=1e9, clock=clock)
+    seen = []
+
+    def step_fn(state, batch):
+        clock.t[0] += 1.0
+        seen.append(batch)
+        return state + batch, {"loss": 0.0}
+
+    batches = list(range(10))
+    with pytest.raises(RuntimeError, match="simulated node failure"):
+        train_with_recovery(step_fn, 0, batches, str(tmp_path),
+                            save_every=100, fail_at=4, monitor=mon)
+    # skip-ahead restart: the resumed run sees exactly the remaining batches
+    state, hist = train_with_recovery(step_fn, sum(range(4)), batches,
+                                      str(tmp_path), save_every=100,
+                                      start_step=4, monitor=mon)
+    assert seen == list(range(10))
+    assert state == sum(batches) and len(hist) == 6
+    # 10 beats total through the shared monitor, all 1s on the fake clock
+    np.testing.assert_allclose(mon.step_times[0], [1.0] * 10)

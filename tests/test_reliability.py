@@ -1,0 +1,367 @@
+"""Reliability layer: fault injection, retry/backoff, circuit breakers,
+supervised serving, tiered re-route/spill/budget routing, adaptive margins.
+
+Everything here is deterministic: injectors are seeded, sleeps are no-ops,
+clocks are fakes.  The chaos invariant under test is the ISSUE-7 contract —
+no admitted request is ever silently lost: it completes, or it is shed /
+failed with a recorded reason, and the per-server accounting identity
+``faults == retries + failed_calls`` holds.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.api import ForestKernel
+from repro.data.synthetic import gaussian_classes
+from repro.serve.proximity import ProximityServer, Tier, TieredProximityServer
+from repro.serve.reliability import (CircuitBreaker, CorruptedResult,
+                                     FaultInjector, InjectedFault,
+                                     RetryPolicy, validate_finite)
+
+
+@pytest.fixture(scope="module")
+def rel_setup():
+    X, y = gaussian_classes(400, d=8, n_classes=3, sep=3.0, seed=7)
+    fk = ForestKernel(kernel_method="gap", n_trees=12, seed=0).fit(X, y)
+    Xq = np.ascontiguousarray(X[:64] + 1e-3)
+    return {"fk": fk, "X": X, "y": y, "Xq": Xq}
+
+
+def _fake_clock():
+    t = [0.0]
+
+    def clock():
+        return t[0]
+
+    clock.t = t
+    return clock
+
+
+def _noop_retry(n=2):
+    return RetryPolicy(max_retries=n, backoff_s=0.0, sleep=lambda s: None)
+
+
+class FlakyEngine:
+    """Engine proxy whose ``predict`` fails the first ``fail`` calls."""
+
+    def __init__(self, engine, fail):
+        self._engine = engine
+        self.fails_left = fail
+        self.calls = 0
+
+    def __getattr__(self, name):
+        return getattr(self._engine, name)
+
+    def predict(self, *a, **kw):
+        self.calls += 1
+        if self.fails_left > 0:
+            self.fails_left -= 1
+            raise RuntimeError("flaky")
+        return self._engine.predict(*a, **kw)
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def test_fault_injector_deterministic_and_scoped():
+    def drive(inj):
+        fired = []
+        for _ in range(300):
+            try:
+                inj.before_call("predict")
+                fired.append(False)
+            except InjectedFault:
+                fired.append(True)
+        return fired
+
+    a = drive(FaultInjector(error_rate=0.3, seed=42))
+    b = drive(FaultInjector(error_rate=0.3, seed=42))
+    assert a == b
+    assert 0 < sum(a) < 300
+
+    # op scoping: an injector restricted to topk never faults predict
+    inj = FaultInjector(error_rate=1.0, ops=("topk",), seed=0)
+    inj.before_call("predict")
+    with pytest.raises(InjectedFault):
+        inj.before_call("topk")
+    assert inj.stats()["injected"]["error"] == 1
+
+
+def test_fault_injector_corrupt_and_validate_finite():
+    inj = FaultInjector(corrupt_rate=1.0, seed=0)
+    a = np.ones((4, 3))
+    out = inj.corrupt("predict", (a,))
+    # corruption poisons a copy, never the original buffer
+    assert np.isfinite(a).all()
+    assert np.isnan(out[0]).any()
+    with pytest.raises(CorruptedResult):
+        validate_finite("predict", out)
+    # integer arrays (topk indices) are exempt from the finite check
+    validate_finite("topk", (np.arange(6), np.ones(6)))
+
+
+def test_retry_policy_backoff_schedule():
+    slept = []
+    rp = RetryPolicy(max_retries=5, backoff_s=0.01, max_backoff_s=0.04,
+                     sleep=slept.append)
+    for k in range(1, 5):
+        rp.backoff(k)
+    # exponential, capped: 10ms, 20ms, 40ms, 40ms
+    np.testing.assert_allclose(slept, [0.01, 0.02, 0.04, 0.04])
+
+
+def test_circuit_breaker_state_machine():
+    clock = _fake_clock()
+    br = CircuitBreaker(fail_threshold=3, cooldown_s=5.0, clock=clock)
+    assert br.state == "closed" and br.allow()
+    br.record_failure()
+    br.record_failure()
+    assert br.allow()                      # under threshold: still closed
+    br.record_failure()
+    assert br.state == "open" and not br.allow()
+    clock.t[0] += 4.9
+    assert not br.allow()                  # cooldown not elapsed
+    clock.t[0] += 0.2
+    assert br.allow()                      # half-open probe allowed
+    assert br.state == "half_open"
+    br.record_failure()                    # probe failed: open again
+    assert br.state == "open" and br.snapshot()["trips"] == 2
+    clock.t[0] += 6.0
+    assert br.allow()
+    br.record_success()                    # probe succeeded: closed
+    assert br.state == "closed" and br.allow()
+
+
+# ---------------------------------------------------------------------------
+# supervised flat server
+# ---------------------------------------------------------------------------
+
+def test_supervised_retry_recovers(rel_setup):
+    fk, y, Xq = rel_setup["fk"], rel_setup["y"], rel_setup["Xq"]
+    flaky = FlakyEngine(fk.engine, fail=2)
+    srv = ProximityServer(flaky, y=y, n_slots=16, retry=_noop_retry(2))
+    res = srv.serve([("predict", Xq[:8])])
+
+    want = fk.engine.predict(y, n_classes=3, X=Xq[:8]).argmax(axis=1)
+    np.testing.assert_array_equal(res[0]["labels"], want)
+    assert flaky.calls == 3                     # 2 faults + 1 success
+
+    st = srv.stats()["reliability"]
+    assert st["faults"] == 2 and st["retries"] == 2
+    assert st["recovered_calls"] == 1 and st["failed_calls"] == 0
+    assert st["failed_requests"] == 0
+    assert srv.finished[0].attempts == 2 and not srv.finished[0].failed
+
+
+def test_supervised_terminal_failure_recorded(rel_setup):
+    fk, y, Xq = rel_setup["fk"], rel_setup["y"], rel_setup["Xq"]
+    flaky = FlakyEngine(fk.engine, fail=10**9)
+    srv = ProximityServer(flaky, y=y, n_slots=16, retry=_noop_retry(1))
+    u_pred = srv.submit("predict", Xq[:4])
+    u_topk = srv.submit("topk", Xq[4:8], k=5)
+    srv.run_until_drained()
+
+    # the failing kind lands in failed_requests with a reason; the healthy
+    # kind in the same tick still completes
+    assert [r.uid for r in srv.failed_requests] == [u_pred]
+    fr = srv.failed_requests[0]
+    assert fr.failed and "flaky" in fr.fail_reason
+    assert [r.uid for r in srv.finished] == [u_topk]
+    assert srv.finished[0].result["indices"].shape == (4, 5)
+
+    st = srv.stats()["reliability"]
+    assert st["faults"] == st["retries"] + st["failed_calls"]
+    assert st["failed_calls"] == 1 and st["retries"] == 1
+    # slots were freed on failure
+    assert len(srv._slot_free) == srv.n_slots
+
+
+def test_breaker_trips_and_fails_fast(rel_setup):
+    fk, y, Xq = rel_setup["fk"], rel_setup["y"], rel_setup["Xq"]
+    clock = _fake_clock()
+    flaky = FlakyEngine(fk.engine, fail=10**9)
+    br = CircuitBreaker(fail_threshold=2, cooldown_s=5.0, clock=clock)
+    srv = ProximityServer(flaky, y=y, n_slots=16, clock=clock,
+                          retry=_noop_retry(0), breaker=br)
+    srv.serve([("predict", Xq[:2])])
+    srv.serve([("predict", Xq[:2])])
+    assert br.state == "open"
+
+    # breaker open: the engine is never touched, requests fail fast
+    calls_before = flaky.calls
+    srv.serve([("predict", Xq[:2])])
+    assert flaky.calls == calls_before
+    assert srv.failed_requests[-1].fail_reason == "breaker_open"
+
+    # engine heals; after cooldown the half-open probe closes the breaker
+    flaky.fails_left = 0
+    clock.t[0] += 10.0
+    res = srv.serve([("predict", Xq[:2])])
+    assert res[0] is not None and br.state == "closed"
+    assert srv.stats()["reliability"]["breaker"]["trips"] == 1
+
+
+# ---------------------------------------------------------------------------
+# tiered ladder: re-route, spill, budgets, adaptive margin
+# ---------------------------------------------------------------------------
+
+def test_tiered_reroute_down_ladder_no_request_lost(rel_setup):
+    fk, y, Xq = rel_setup["fk"], rel_setup["y"], rel_setup["Xq"]
+    ce = fk.compress(n_prototypes=6, k=60)
+    broken = FlakyEngine(ce, fail=10**9)
+    tiers = [Tier("compressed", broken, y=ce.prototype_labels_,
+                  kinds=("predict",), n_slots=16),
+             Tier("full", fk.engine, y=y, kinds=("predict",), n_slots=16)]
+    srv = TieredProximityServer(tiers, escalate_margin=0.0,
+                                retry=_noop_retry(1))
+    uids = [srv.submit("predict", Xq[i * 4:(i + 1) * 4]) for i in range(4)]
+    srv.run_until_drained()
+
+    # tier 0 faults on everything; every request re-routes down-ladder and
+    # is answered by the full tier — zero terminal failures
+    assert len(srv.finished) == 4
+    for u in uids:
+        r = srv._requests[u]
+        assert r.result is not None and not r.failed
+        assert r.final_tier == "full" and r.reroutes == 1
+        assert r.fail_reason is not None        # the fault is on record
+    st = srv.stats()["reliability"]
+    assert st["reroutes"] == 4 and st["failures"] == 0
+    assert st["recoveries"] == 4
+
+
+def test_tiered_terminal_failure_at_deepest_tier(rel_setup):
+    fk, y, Xq = rel_setup["fk"], rel_setup["y"], rel_setup["Xq"]
+    broken = FlakyEngine(fk.engine, fail=10**9)
+    srv = TieredProximityServer(
+        [Tier("only", broken, y=y, kinds=("predict",), n_slots=16)],
+        escalate_margin=0.0, retry=_noop_retry(0))
+    u = srv.submit("predict", Xq[:4])
+    srv.run_until_drained()
+    r = srv._requests[u]
+    assert r.failed and r.result is None and "flaky" in r.fail_reason
+    assert srv.stats()["reliability"]["failures"] == 1
+
+
+def test_tiered_overload_spill(rel_setup):
+    fk, y, Xq = rel_setup["fk"], rel_setup["y"], rel_setup["Xq"]
+    ce = fk.compress(n_prototypes=6, k=60)
+    tiers = [Tier("compressed", ce, y=ce.prototype_labels_,
+                  kinds=("predict",), n_slots=4, spill_watermark=2),
+             Tier("full", fk.engine, y=y, kinds=("predict",), n_slots=64)]
+    srv = TieredProximityServer(tiers, escalate_margin=0.0)
+    uids = [srv.submit("predict", Xq[i * 4:(i + 1) * 4]) for i in range(8)]
+    srv.run_until_drained()
+
+    # routing happens before any pumping: 2 requests queue at the cheap
+    # tier, the rest spill past the watermark to the full tier
+    assert len(srv.finished) == 8
+    paths = [srv._requests[u].tier_path for u in uids]
+    assert paths.count(["compressed"]) == 2
+    assert paths.count(["full"]) == 6
+    assert srv.stats()["reliability"]["spills"] == 6
+    assert all(srv._requests[u].result is not None for u in uids)
+
+
+def test_deadline_budget_routes_straight_to_deep_tier(rel_setup):
+    fk, y, Xq = rel_setup["fk"], rel_setup["y"], rel_setup["Xq"]
+    clock = _fake_clock()
+    pe = fk.prefix_engine(3)
+    tiers = [Tier("shallow", pe, y=y, kinds=("predict",), n_slots=16,
+                  budget_s=5.0),
+             Tier("full", fk.engine, y=y, kinds=("predict",), n_slots=16,
+                  budget_s=5.0)]
+    srv = TieredProximityServer(tiers, escalate_margin=0.5, clock=clock)
+    # ample deadline: affords shallow budget + escalation hop (5 + 5)
+    u_slow = srv.submit("predict", Xq[:4], deadline_s=100.0)
+    # tight deadline: 6s < 10s — route straight to the full tier
+    u_tight = srv.submit("predict", Xq[4:8], deadline_s=6.0)
+    srv.run_until_drained()
+
+    assert srv._requests[u_slow].tier_path[0] == "shallow"
+    assert srv._requests[u_tight].tier_path == ["full"]
+    assert srv.budget_skips == 1
+    assert srv._requests[u_tight].result is not None
+    assert srv.stats()["tiers"]["shallow"]["budget_s"] == 5.0
+
+
+def test_adaptive_margin_live_threshold(rel_setup):
+    fk = rel_setup["fk"]
+    srv = fk.serve_tiered(prefix_depth=3, n_prototypes=6, proto_k=60,
+                          adaptive_margin=True, margin_window=64,
+                          margin_target=1.0, escalate_margin=0.05)
+    # below the minimum window the fixed margin applies
+    srv._margin_obs.extend([(0.9, True)] * 3)
+    assert srv._live_margin() == pytest.approx(0.05)
+
+    # 40 confident-and-agreeing rows, 20 low-margin disagreements: with a
+    # perfect-agreement target the threshold calibrates to the smallest
+    # margin in the all-agree prefix
+    srv._margin_obs.clear()
+    srv._margin_obs.extend([(0.8, True)] * 40 + [(0.1, False)] * 20)
+    assert srv._live_margin() == pytest.approx(0.8)
+    assert srv.stats()["live_margin"] == pytest.approx(0.8)
+
+    # a 95% target tolerates some disagreement above the cut, so the
+    # threshold relaxes below the disagreeing margins
+    srv.margin_target = 0.95
+    assert srv._live_margin() == pytest.approx(0.1)
+
+
+def test_adaptive_margin_feeds_from_escalations(rel_setup):
+    fk, Xq = rel_setup["fk"], rel_setup["Xq"]
+    srv = fk.serve_tiered(prefix_depth=2, n_prototypes=6, proto_k=60,
+                          escalate_margin=0.9, adaptive_margin=True,
+                          margin_window=512)
+    srv.serve([("predict", Xq[i * 8:(i + 1) * 8]) for i in range(4)])
+    # the aggressive fixed margin forces escalations, which populate the
+    # calibration window with (shallow margin, deep agreement) pairs
+    assert srv.escalations > 0
+    assert len(srv._margin_obs) > 0
+    assert np.isfinite(srv.stats()["live_margin"])
+
+
+def test_worker_respawn_counts_dead_threads(rel_setup):
+    fk, Xq = rel_setup["fk"], rel_setup["Xq"]
+    srv = fk.serve_tiered(prefix_depth=3, n_prototypes=6, proto_k=60)
+    dead = threading.Thread(target=lambda: None)
+    dead.start()
+    dead.join()
+    srv._worker_threads[0] = dead
+    try:
+        srv._respawn_dead_workers()
+        assert srv.worker_restarts == 1
+        assert srv._worker_threads[0].is_alive()
+    finally:
+        srv._stop.set()
+        srv._worker_threads[0].join(timeout=5.0)
+
+
+def test_sync_chaos_no_silent_loss(rel_setup):
+    fk, Xq = rel_setup["fk"], rel_setup["Xq"]
+    inj = FaultInjector(error_rate=0.2, corrupt_rate=0.05, seed=3,
+                        sleep=lambda s: None)
+    srv = fk.serve_tiered(prefix_depth=3, n_prototypes=6, proto_k=60,
+                          n_slots=8, escalate_margin=0.2,
+                          fault_injector=inj, retry=_noop_retry(2))
+    kinds = ["predict", "topk", "outlier"]
+    uids = [srv.submit(kinds[i % 3], Xq[(i % 8) * 8:(i % 8) * 8 + 8])
+            for i in range(36)]
+    srv.run_until_drained()
+
+    stats = srv.stats()
+    assert stats["reliability"]["faults"] > 0          # chaos actually hit
+    lost = unaccounted = 0
+    for u in uids:
+        r = srv._requests[u]
+        if not r.done.is_set():
+            lost += 1
+        if r.result is None and not (r.shed or r.failed or r.timed_out):
+            unaccounted += 1
+        if r.failed:
+            assert r.fail_reason        # terminal failures carry a reason
+    assert lost == 0 and unaccounted == 0
+    for s in srv._servers:
+        assert s.faults == s.retries + s.failed_calls

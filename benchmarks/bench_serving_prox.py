@@ -15,6 +15,8 @@ engine on both p50 latency and factor memory at 50k training samples.
 from __future__ import annotations
 
 import argparse
+import gc
+import math
 import json
 import time
 
@@ -24,6 +26,8 @@ from repro.applications.prototypes import compress
 from repro.core.api import ForestKernel
 from repro.data.synthetic import gaussian_classes, train_test_split
 from repro.forest import _native
+from repro.obs.metrics import MetricsRegistry, parse_exposition
+from repro.obs.trace import Tracer
 from repro.serve.proximity import ProximityServer
 from repro.serve.reliability import FaultInjector, RetryPolicy
 
@@ -174,6 +178,11 @@ def _sustained(fk, ce, Xte, ytr, *, slo_ms: float = 500.0, rows: int = 8,
         else None
     out["escalated_oracle_agreement"] = round(float(np.mean(esc_agree)), 4) \
         if esc_agree else None
+    # the run's full registry state rides along in the report, and the
+    # exposition must round-trip through the strict parser
+    exposition = srv.registry.exposition()
+    out["exposition_series"] = len(parse_exposition(exposition))
+    out["registry_snapshot"] = srv.registry.snapshot()
     print(f" sustained: sync full {sync_rps:.2f} req/s | tiered async "
           f"{achieved:.1f} req/s ({out['speedup_vs_sync_full']}x) "
           f"p95 {p95:.1f}ms (SLO {slo_ms}ms: "
@@ -186,6 +195,111 @@ def _sustained(fk, ce, Xte, ytr, *, slo_ms: float = 500.0, rows: int = 8,
         assert st["shed"] == 0, f"{st['shed']} deadline sheds at nominal load"
         assert esc_agree and min(esc_agree) == 1.0, \
             "need >=1 escalated request whose labels match the full oracle"
+    return out
+
+
+def _obs_overhead(fk, ce, Xte, ytr, *, n_requests: int = 64, rows: int = 0,
+                  n_slots: int = 256, reps: int = 10,
+                  max_p95_inflation: float = 1.05,
+                  assert_overhead: bool = False, seed: int = 3) -> dict:
+    """Instrumentation-overhead mode: the identical mixed workload through
+    a ``ProximityServer`` with observability ON (registry + tracer +
+    engine timing proxy) and OFF (``MetricsRegistry(enabled=False)`` —
+    engine calls skip the timing proxy, every metric is the shared no-op,
+    no spans).
+
+    Measurement design, tuned so a 5% bound is CI-stable on noisy shared
+    machines (the instrumentation cost is a few tens of µs per request;
+    naive wall-clock p95 comparisons drift by ±10% between runs):
+
+    - Requests are served **one at a time** on both servers,
+      **interleaved per request** with the serve order alternating, so
+      each ON/OFF latency pair shares machine state (frequency scaling,
+      cache pressure, sibling load) to within a few ms.
+    - Requests are **slot-filling** (``rows`` defaults to ``n_slots``,
+      sized independently of the SLO-mode config) so each carries one
+      batch-scale engine tick of real work — the granularity the fixed
+      per-request instrumentation cost should be judged against.
+    - The server runs the **compressed engine** (the latency-critical
+      serving model), giving a tight unimodal latency distribution; the
+      tiered ladder's tail is multi-modal (escalation-path dependent),
+      which swamps a 5% bound with routing noise.  Ladder span/metric
+      coverage is exercised by the chaos and sustained modes and
+      asserted by the trace tests.
+    - The workload is replayed ``reps`` times and each request keeps its
+      **fastest** replay per mode (the element-wise min strips scheduler
+      jitter), giving a paired per-request inflation ratio that is
+      drift-free by construction.  The asserted statistic is the
+      **median ratio over the tail cluster** (requests whose baseline
+      minimum sits in the top 15%) — the inflation experienced at the
+      p95 latency point — with the raw p95s reported alongside.
+
+    Acceptance: metrics + tracing may inflate tail latency by at most
+    ``max_p95_inflation``x (5% by default).
+    """
+    rows = int(rows) if rows else n_slots
+    reqs = _workload(Xte, n_requests, rows, seed=seed)
+
+    def _build(instrumented: bool) -> ProximityServer:
+        if instrumented:
+            kw = {"registry": MetricsRegistry(enabled=True),
+                  "tracer": Tracer(capacity=64)}
+        else:
+            kw = {"registry": MetricsRegistry(enabled=False),
+                  "tracer": Tracer(enabled=False)}
+        srv = ProximityServer(ce, y=ce.prototype_labels_, n_slots=n_slots,
+                              **kw)
+        srv.serve(reqs[:4])                    # warm every kind
+        return srv
+
+    def _one(srv: ProximityServer, r) -> float:
+        srv.submit(*r)
+        srv.run_until_drained()
+        lat = srv.finished[-1].latency_s       # the request just served
+        return lat if lat is not None else math.inf
+
+    base = np.full(len(reqs), np.inf)
+    instr = np.full(len(reqs), np.inf)
+    gc.collect()
+    gc_was_enabled = gc.isenabled()
+    gc.disable()                   # GC pauses are ~100µs spikes — paired
+    try:                           # runs must not eat them asymmetrically
+        srv_off, srv_on = _build(False), _build(True)
+        for rep in range(reps):
+            for i, r in enumerate(reqs):
+                if (rep + i) % 2 == 0:         # alternate order: the
+                    b = _one(srv_off, r)       # second serve of the same
+                    a = _one(srv_on, r)        # rows runs cache-warm
+                else:
+                    a = _one(srv_on, r)
+                    b = _one(srv_off, r)
+                if b < base[i]:
+                    base[i] = b
+                if a < instr[i]:
+                    instr[i] = a
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+    p95_off = float(np.percentile(base, 95) * 1e3)
+    p95_on = float(np.percentile(instr, 95) * 1e3)
+    ratios = instr / np.maximum(base, 1e-12)
+    tail = base >= np.percentile(base, 85)
+    inflation = float(np.median(ratios[tail]))
+    out = {"reps": reps, "requests": n_requests, "rows": rows,
+           "p95_ms_uninstrumented": round(p95_off, 3),
+           "p95_ms_instrumented": round(p95_on, 3),
+           "median_inflation": round(float(np.median(ratios)), 4),
+           "tail_inflation": round(inflation, 4),
+           "bound": max_p95_inflation,
+           "within_bound": bool(inflation <= max_p95_inflation)}
+    print(f" obs-overhead: p95 {p95_off:.2f}ms -> {p95_on:.2f}ms with "
+          f"metrics+tracing on (tail inflation {inflation:.3f}x, bound "
+          f"{max_p95_inflation}x: "
+          f"{'met' if out['within_bound'] else 'EXCEEDED'})", flush=True)
+    if assert_overhead:
+        assert out["within_bound"], \
+            f"observability inflates tail latency {inflation:.3f}x " \
+            f"(bound {max_p95_inflation}x)"
     return out
 
 
@@ -323,6 +437,8 @@ def run(n: int = 50_000, d: int = 20, trees: int = 50, backend: str = "auto",
         assert_slo: bool = False, chaos: bool = True,
         chaos_requests: int = 200, chaos_error_rate: float = 0.08,
         assert_chaos: bool = False, snapshot: bool = True,
+        obs_overhead: bool = False, obs_overhead_requests: int = 64,
+        max_obs_inflation: float = 1.05,
         out_path: str = "BENCH_serving_prox.json") -> dict:
     if backend == "auto":
         backend = "native" if _native.available() else "scipy"
@@ -384,6 +500,11 @@ def run(n: int = 50_000, d: int = 20, trees: int = 50, backend: str = "auto",
             error_rate=chaos_error_rate,
             prefix_depth=sustained_prefix_depth,
             escalate_margin=escalate_margin, assert_chaos=assert_chaos)
+    if obs_overhead:
+        report["obs_overhead"] = _obs_overhead(
+            fk, ce, Xte, ytr, n_requests=obs_overhead_requests,
+            max_p95_inflation=max_obs_inflation,
+            assert_overhead=assert_slo)
     if snapshot:
         report["snapshot"] = _snapshot_roundtrip(
             fk, Xte, ytr, report["fit_s"], assert_conformant=assert_chaos)
@@ -429,6 +550,12 @@ def main() -> None:
                          "round-trip is conformance-identical")
     ap.add_argument("--no-snapshot", action="store_true",
                     help="skip the snapshot save/load round-trip")
+    ap.add_argument("--obs-overhead", action="store_true",
+                    help="measure the p95 cost of metrics+tracing vs a "
+                         "registry-disabled run (asserted <= the bound "
+                         "when combined with --assert-slo)")
+    ap.add_argument("--obs-requests", type=int, default=64)
+    ap.add_argument("--max-obs-inflation", type=float, default=1.05)
     ap.add_argument("--out", default="BENCH_serving_prox.json")
     args = ap.parse_args()
     run(n=args.n, d=args.d, trees=args.trees, backend=args.backend,
@@ -444,6 +571,9 @@ def main() -> None:
         chaos_requests=args.chaos_requests,
         chaos_error_rate=args.chaos_error_rate,
         assert_chaos=args.assert_chaos, snapshot=not args.no_snapshot,
+        obs_overhead=args.obs_overhead,
+        obs_overhead_requests=args.obs_requests,
+        max_obs_inflation=args.max_obs_inflation,
         out_path=args.out)
 
 

@@ -1,12 +1,17 @@
 """Out-of-sample proximity serving end-to-end: fit a forest kernel, warm the
 application states, prototype-compress it, then serve a mixed request stream
 (predict / topk / outlier / propagate / embed) through the continuous-batching
-``ProximityServer`` and compare the full and compressed models.
+``ProximityServer`` and compare the full and compressed models.  Ends with
+the observability layer: a per-tier latency table read from the shared
+metrics registry, a Prometheus exposition dump, and a Chrome-trace JSON
+(open ``chrome://tracing`` or https://ui.perfetto.dev and load it) showing
+each request's causal path through the tier ladder.
 
   PYTHONPATH=src python examples/serve_proximities.py [--n 4000]
-      [--trees 30] [--backend auto] [--slots 32]
+      [--trees 30] [--backend auto] [--slots 32] [--trace-out trace.json]
 """
 import argparse
+import json
 
 import numpy as np
 
@@ -25,6 +30,10 @@ def main() -> None:
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "scipy", "jax", "pallas", "native"])
     ap.add_argument("--slots", type=int, default=32)
+    ap.add_argument("--trace-out", default="trace.json",
+                    help="Chrome-trace JSON output path ('' to skip)")
+    ap.add_argument("--metrics-out", default="",
+                    help="optional path for the Prometheus exposition dump")
     args = ap.parse_args()
     backend = args.backend
     if backend == "auto":
@@ -101,6 +110,37 @@ def main() -> None:
               f"{qc['hits']}/{qc['hits'] + qc['misses']} hits "
               f"(rate {qc['hit_rate']:.2f})")
     assert tacc > 0.9, "tiered serving must predict accurately"
+
+    # 5. observability: per-tier latency table from the shared registry,
+    #    Prometheus exposition, and a Chrome-trace of the request spans
+    from repro.obs.metrics import parse_exposition
+    print("per-tier latency (registry histograms):")
+    print(f"  {'tier':>10} {'kind':>9} {'n':>5} {'p50 ms':>8} "
+          f"{'p95 ms':>8} {'p99 ms':>8}")
+    for name, tstat in ts["tiers"].items():
+        for kind, ks in sorted(tstat["kinds"].items()):
+            h = tsrv.registry.histogram(
+                "serve_request_seconds",
+                labels=("tier", "kind")).labels(tier=name, kind=kind)
+            print(f"  {name:>10} {kind:>9} {ks['requests']:>5} "
+                  f"{ks['p50_ms']:>8.2f} {ks['p95_ms']:>8.2f} "
+                  f"{h.percentile(99) * 1e3:>8.2f}")
+    text = tsrv.registry.exposition()
+    series = parse_exposition(text)
+    print(f"prometheus exposition: {len(text.splitlines())} lines, "
+          f"{len(series)} series (round-trip parsed)")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as fh:
+            fh.write(text)
+        print(f"  wrote {args.metrics_out}")
+    if args.trace_out:
+        obj = tsrv.tracer.export(args.trace_out)
+        n_spans = sum(1 for e in obj["traceEvents"] if e["ph"] == "X")
+        print(f"chrome trace: {len(tsrv.tracer.spans())} requests, "
+              f"{n_spans} spans, {len(obj['traceEvents'])} events "
+              f"-> {args.trace_out}")
+        with open(args.trace_out) as fh:     # well-formed JSON on disk
+            json.load(fh)
     print("OK")
 
 

@@ -202,7 +202,12 @@ class ForestKernel:
 
     def serve(self, n_slots: int = 64, engine=None, **kw):
         """A ``ProximityServer`` over this kernel's engine (or a compressed
-        engine passed via ``engine=``); see ``repro.serve.proximity``."""
+        engine passed via ``engine=``); see ``repro.serve.proximity``.
+
+        Extra keyword arguments pass through — notably ``registry=``
+        (a ``repro.obs.metrics.MetricsRegistry``; one is created by
+        default) and ``tracer=`` (a ``repro.obs.trace.Tracer`` for
+        per-request span trees)."""
         from ..serve.proximity import ProximityServer
         eng = self.engine if engine is None else engine
         y = getattr(eng, "prototype_labels_", None)
@@ -232,7 +237,10 @@ class ForestKernel:
         the full tier — they are fitted against the full reference set.
         Extra keyword arguments (``fault_injector``, ``retry``,
         ``breaker_threshold``, ``spill_watermark``, ``adaptive_margin``,
-        ...) pass through to ``TieredProximityServer``.
+        ``registry``, ``tracer``, ...) pass through to
+        ``TieredProximityServer`` — the ladder shares one metrics
+        registry across its tiers and traces every request by default
+        (``srv.tracer.export(path)`` writes Chrome-trace JSON).
         """
         import time as _time
         from ..serve.proximity import Tier, TieredProximityServer

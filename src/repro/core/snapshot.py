@@ -25,12 +25,14 @@ from __future__ import annotations
 
 import hashlib
 import json
+import time
 from typing import Optional
 
 import numpy as np
 
 from ..forest.trees import pack_trees, unpack_trees
 from ..forest.training import Binner
+from ..obs.metrics import global_registry
 from .context import EnsembleContext
 from .engine import ProximityEngine
 from .factorization import factor_digest
@@ -50,6 +52,14 @@ class SnapshotError(RuntimeError):
     """A snapshot failed validation (corruption, version, or digest)."""
 
 
+def _observe_snapshot(op: str, dt: float) -> None:
+    """Time a successful save/load into ``snapshot_seconds{op}`` on the
+    process-wide registry (no-op when it is disabled)."""
+    global_registry().histogram(
+        "snapshot_seconds", "engine snapshot save/load time",
+        labels=("op",)).labels(op=op).observe(dt)
+
+
 def _checksum(a: np.ndarray) -> str:
     a = np.ascontiguousarray(a)
     h = hashlib.sha256()
@@ -60,6 +70,7 @@ def _checksum(a: np.ndarray) -> str:
 
 def save_kernel(fk, path) -> dict:
     """Write a fitted ForestKernel to ``path`` (npz).  Returns the manifest."""
+    t0 = time.perf_counter()
     if fk.engine is None or fk.forest is None or fk.ctx is None:
         raise ValueError("fit the kernel before saving (engine is not built)")
     forest, eng = fk.forest, fk.engine
@@ -96,6 +107,7 @@ def save_kernel(fk, path) -> dict:
     arrays["manifest"] = np.frombuffer(
         json.dumps(manifest).encode(), dtype=np.uint8)
     np.savez_compressed(path, **arrays)
+    _observe_snapshot("save", time.perf_counter() - t0)
     return manifest
 
 
@@ -108,6 +120,7 @@ def load_kernel(path, engine_backend: Optional[str] = None):
     """
     from .api import ForestKernel, _MODEL_TYPES   # circular at module scope
 
+    t0 = time.perf_counter()
     try:
         with np.load(path) as data:
             if "manifest" not in data.files:
@@ -180,4 +193,5 @@ def load_kernel(path, engine_backend: Optional[str] = None):
                      fk.engine.w) != manifest["factor_digest"]:
         raise SnapshotError(f"{path}: rebuilt factor digest mismatch")
     fk.Q_, fk.W_ = fk.engine.Q, fk.engine.W
+    _observe_snapshot("load", time.perf_counter() - t0)
     return fk

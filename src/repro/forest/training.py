@@ -39,10 +39,12 @@ The TPU-native counterpart (one-hot × matmul histograms) lives in
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs.metrics import global_registry
 from .trees import Tree
 
 __all__ = ["TreeParams", "Binner", "fit_tree", "fit_tree_binned",
@@ -581,13 +583,31 @@ def _grow_trees(Xb: np.ndarray, y: np.ndarray, tasks: Sequence[tuple],
         np.concatenate([t[1] for t in tasks]), dtype=np.float64)
     bounds_g = np.concatenate(
         [[0], np.cumsum([len(t[0]) for t in tasks])]).astype(np.int64)
+    # per-level profiling into the process-wide registry (no-op when the
+    # global registry is disabled); one histogram observation + two gauge
+    # sets per level is negligible against the histogram pass itself
+    _reg = global_registry()
+    _h_level = _reg.histogram(
+        "train_level_seconds", "level-synchronous growth: one level",
+        labels=("backend",)).labels(backend=backend)
+    _c_levels = _reg.counter(
+        "train_levels_total", "tree levels grown",
+        labels=("backend",)).labels(backend=backend)
+    _g_nodes = _reg.gauge("train_frontier_nodes",
+                          "active nodes in the last-grown level")
+    _g_rows = _reg.gauge("train_frontier_rows",
+                         "frontier sample rows in the last-grown level")
+
     depth = 0
     while live and depth < params.max_depth:
         depth += 1
+        _t_level = time.perf_counter()
         g_sizes = np.array([len(acts[t]) for t in live], np.int64)
         node_off = np.concatenate([[0], np.cumsum(g_sizes)]).astype(np.int64)
         G = int(node_off[-1])
         y_g = yc[rows_g]
+        _g_nodes.set(G)
+        _g_rows.set(len(rows_g))
 
         best_gain = np.empty(G)
         best_f = np.empty(G, np.int64)
@@ -734,5 +754,7 @@ def _grow_trees(Xb: np.ndarray, y: np.ndarray, tasks: Sequence[tuple],
             rows_g = np.empty(0, np.int64)
             w_g = np.empty(0, np.float64)
             bounds_g = np.zeros(1, np.int64)
+        _h_level.observe(time.perf_counter() - _t_level)
+        _c_levels.inc()
 
     return [st.to_tree() for st in stores]

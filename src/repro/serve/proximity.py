@@ -83,6 +83,9 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.engine import prediction_margin
+from ..obs.metrics import EWMA, MetricsRegistry
+from ..obs.profile import instrument
+from ..obs.trace import NULL_SPAN, Tracer
 from .reliability import (CircuitBreaker, CorruptedResult, FaultInjector,
                           RetryPolicy, validate_finite)
 
@@ -90,6 +93,10 @@ __all__ = ["ProxRequest", "ProximityServer", "TieredProximityServer",
            "Tier", "TieredRequest", "KINDS"]
 
 KINDS = ("predict", "topk", "outlier", "propagate", "embed")
+
+# shared no-op tracer: servers built without a tracer hand every request
+# the NULL_SPAN, so call sites never branch on "is tracing on"
+_NULL_TRACER = Tracer(enabled=False)
 
 
 @dataclasses.dataclass
@@ -113,6 +120,7 @@ class ProxRequest:
     fail_reason: Optional[str] = None
     attempts: int = 0                      # extra engine-call attempts spent
     result: Any = None
+    span: Any = NULL_SPAN                  # trace span (tier attempt / root)
 
     @property
     def n_rows(self) -> int:
@@ -159,6 +167,15 @@ class ProximityServer:
         skipped and active requests fail fast with reason
         ``"breaker_open"`` (the tiered server re-routes them down-ladder).
     name : label used in fault-injection scoping and failure reasons.
+    registry : ``MetricsRegistry`` every counter/latency observation goes
+        through (one is created if not given; the tiered server shares one
+        across its tiers).  Pass ``MetricsRegistry(enabled=False)`` for an
+        uninstrumented server (the ``--obs-overhead`` baseline) — engine
+        calls then skip the timing proxy entirely and ``stats()`` latency
+        views are empty.
+    tracer : optional ``obs.trace.Tracer``; when set, every request gets a
+        span (admission / engine calls / retries / terminal state).  The
+        tiered server passes per-tier child spans through ``submit``.
     """
 
     def __init__(self, engine, y: Optional[np.ndarray] = None,
@@ -167,8 +184,18 @@ class ProximityServer:
                  fault_injector: Optional[FaultInjector] = None,
                  retry: Optional[RetryPolicy] = None,
                  breaker: Optional[CircuitBreaker] = None,
-                 name: Optional[str] = None):
-        self.engine = engine
+                 name: Optional[str] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
+        self.registry = registry if registry is not None else \
+            MetricsRegistry()
+        self.tracer = tracer if tracer is not None else _NULL_TRACER
+        tier = name if name else "server"
+        self._tier_label = tier
+        # every engine op is timed through the instrumentation proxy; an
+        # explicitly disabled registry keeps the raw engine (zero overhead)
+        self.engine = instrument(engine, self.registry, tier=tier) \
+            if self.registry.enabled else engine
         self.y = None if y is None else np.asarray(y, dtype=np.int64)
         if n_classes is None and self.y is not None and len(self.y):
             n_classes = int(self.y.max()) + 1
@@ -181,6 +208,11 @@ class ProximityServer:
         self.fault_injector = fault_injector
         self.retry = retry if retry is not None else RetryPolicy()
         self.breaker = breaker
+        if self.registry.enabled:
+            if self.breaker is not None:
+                self.breaker.bind_registry(self.registry, tier=tier)
+            if self.fault_injector is not None:
+                self.fault_injector.bind_registry(self.registry)
 
         self._slot_X: Optional[np.ndarray] = None    # (n_slots, d), lazy
         self._slot_free: List[int] = list(range(self.n_slots))
@@ -193,24 +225,79 @@ class ProximityServer:
         self.ticks = 0
         self.rows_served = 0
         self._occupancy: List[int] = []
+
+        # ---- metric families (one shared registry per server/ladder) ----
+        reg = self.registry
+        self._m_requests = reg.counter(
+            "serve_requests_total", "requests by terminal status",
+            labels=("tier", "kind", "status"))
+        h_lat = reg.histogram("serve_request_seconds",
+                              "submit -> done latency (s)",
+                              labels=("tier", "kind"))
+        h_wait = reg.histogram("serve_wait_seconds",
+                               "queue wait (submit -> admit, s)",
+                               labels=("tier", "kind"))
+        h_svc = reg.histogram("serve_service_seconds",
+                              "in-slot service time (admit -> done, s)",
+                              labels=("tier", "kind"))
+        self._h_lat = {k: h_lat.labels(tier=tier, kind=k) for k in KINDS}
+        self._h_wait = {k: h_wait.labels(tier=tier, kind=k) for k in KINDS}
+        self._h_svc = {k: h_svc.labels(tier=tier, kind=k) for k in KINDS}
+        self._c_done = {k: self._m_requests.labels(tier=tier, kind=k,
+                                                   status="done")
+                        for k in KINDS}
+        self._g_queue = reg.gauge("serve_queue_depth", "queued requests",
+                                  labels=("tier",)).labels(tier=tier)
+        self._g_occ = reg.gauge("serve_slot_occupancy", "occupied slots",
+                                labels=("tier",)).labels(tier=tier)
+        self._c_ticks = reg.counter("serve_ticks_total", "engine ticks",
+                                    labels=("tier",)).labels(tier=tier)
+        self._c_rows = reg.counter("serve_rows_total", "query rows served",
+                                   labels=("tier",)).labels(tier=tier)
         # reliability accounting: every engine-call exception is a fault,
         # and each fault is either retried or terminal, so
-        # faults == retries + failed_calls always holds (tested)
-        self.faults = 0            # engine-call exceptions observed
-        self.retries = 0           # faults answered with a re-attempt
-        self.failed_calls = 0      # faults that exhausted the retry budget
-        self.recovered_calls = 0   # calls that succeeded after >=1 fault
+        # faults == retries + failed_calls always holds (tested).  These
+        # are registry counters; the legacy int attributes below are
+        # read-only views over them (``stats()`` backward compat).
+        rel = reg.counter("serve_engine_faults_total",
+                          "supervised engine-call outcomes",
+                          labels=("tier", "event"))
+        self._c_faults = rel.labels(tier=tier, event="fault")
+        self._c_retries = rel.labels(tier=tier, event="retry")
+        self._c_failed_calls = rel.labels(tier=tier, event="failed_call")
+        self._c_recovered = rel.labels(tier=tier, event="recovered_call")
+
+    # legacy counter views (kept as attributes-in-spirit: same names and
+    # int semantics as the pre-registry fields, now reading the registry)
+    @property
+    def faults(self) -> int:
+        return int(self._c_faults.value)
+
+    @property
+    def retries(self) -> int:
+        return int(self._c_retries.value)
+
+    @property
+    def failed_calls(self) -> int:
+        return int(self._c_failed_calls.value)
+
+    @property
+    def recovered_calls(self) -> int:
+        return int(self._c_recovered.value)
 
     # ---------------- public API ----------------
     def submit(self, kind: str, X: np.ndarray, k: int = 10,
                priority: int = 0, deadline_s: Optional[float] = None,
-               deadline_at: Optional[float] = None) -> int:
+               deadline_at: Optional[float] = None, span=None) -> int:
         """Queue a request; returns its uid (see ``.finished`` / ``serve``).
 
         ``priority``: higher values are served first; FIFO within a level.
         ``deadline_s``: relative deadline from now; ``deadline_at`` passes an
         absolute clock value instead (the tiered server uses it so a
         request's deadline survives escalation unchanged).
+        ``span``: trace span this request reports into (the tiered server
+        passes a per-tier child span); without one, a root span is opened
+        on this server's tracer.
         """
         if kind not in KINDS:
             raise ValueError(f"unknown request kind {kind!r}; have {KINDS}")
@@ -232,6 +319,12 @@ class ProximityServer:
         req = ProxRequest(uid=next(self._uids), kind=kind, X=X, k=int(k),
                           priority=int(priority), deadline_at=deadline_at)
         req.submitted_at = now
+        if span is None:
+            span = self.tracer.root("request", kind=kind, uid=req.uid,
+                                    rows=X.shape[0], tier=self._tier_label)
+        req.span = span
+        span.event("submit", t=now, queue_depth=len(self.queue),
+                   priority=req.priority)
         # insert after every request of >= priority: higher priorities jump
         # the line, equal priorities stay FIFO (stable, no overtaking)
         idx = len(self.queue)
@@ -259,7 +352,10 @@ class ProximityServer:
                 failed += 1
             return failed
         self.ticks += 1
-        self._occupancy.append(self.n_slots - len(self._slot_free))
+        self._c_ticks.inc()
+        occ = self.n_slots - len(self._slot_free)
+        self._occupancy.append(occ)
+        self._g_occ.set(occ)
 
         # one routed batch per tick, in slot order; a defensive copy so no
         # engine/backend ever aliases the mutable slot buffer (the PR-1
@@ -283,8 +379,14 @@ class ProximityServer:
             self.finished.append(req)
             self._slot_free.extend(int(s) for s in req.slots)
             self.rows_served += req.n_rows
+            self._c_rows.inc(req.n_rows)
             del self.active[req.uid]
             retired += 1
+            self._c_done[req.kind].inc()
+            self._h_lat[req.kind].observe(req.latency_s)
+            self._h_wait[req.kind].observe(req.wait_s)
+            self._h_svc[req.kind].observe(req.service_s)
+            req.span.end(now)
         return retired
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[ProxRequest]:
@@ -315,6 +417,10 @@ class ProximityServer:
                     r.shed = True
                     r.done_at = now
                     self.shed_requests.append(r)
+                    self._m_requests.labels(tier=self._tier_label,
+                                            kind=r.kind, status="shed").inc()
+                    r.span.event("shed", t=now)
+                    r.span.end(now)
                 else:
                     kept.append(r)
             self.queue = kept
@@ -328,6 +434,8 @@ class ProximityServer:
             req.admitted_at = now
             self._slot_X[slots] = req.X
             self.active[req.uid] = req
+            req.span.event("admit", t=now, slots=req.n_rows)
+        self._g_queue.set(len(self.queue))
 
     def _supervised_kind(self, kind: str, reqs: List[ProxRequest],
                          X_tick: np.ndarray, pos: Dict[int, int]) -> None:
@@ -337,24 +445,33 @@ class ProximityServer:
         ``failed_requests`` with a reason — never silently dropped."""
         arrays = None
         err: Optional[BaseException] = None
+        t0c = self._clock()
         for attempt in range(self.retry.max_retries + 1):
             try:
                 arrays = self._compute_kind(kind, reqs, X_tick)
                 break
             except Exception as exc:          # noqa: BLE001 — supervisor
-                self.faults += 1
+                self._c_faults.inc()
                 err = exc
                 if self.breaker is not None:
                     self.breaker.record_failure()
                 if attempt < self.retry.max_retries and (
                         self.breaker is None or self.breaker.allow()):
-                    self.retries += 1
+                    self._c_retries.inc()
                     for r in reqs:
                         r.attempts += 1
+                        r.span.event("retry", attempt=attempt + 1,
+                                     error=type(exc).__name__)
                     self.retry.backoff(attempt + 1)
                 else:
-                    self.failed_calls += 1
+                    self._c_failed_calls.inc()
                     break
+        t1c = self._clock()
+        for r in reqs:
+            r.span.record(f"engine:{kind}", t0c, t1c,
+                          tier=self._tier_label, rows=r.n_rows,
+                          batch_rows=X_tick.shape[0],
+                          ok=arrays is not None)
         if arrays is None:
             reason = f"{type(err).__name__}: {err}"
             for req in reqs:
@@ -363,7 +480,7 @@ class ProximityServer:
         if self.breaker is not None:
             self.breaker.record_success()
         if err is not None:
-            self.recovered_calls += 1
+            self._c_recovered.inc()
         self._assign_results(kind, reqs, arrays, pos)
 
     def _compute_kind(self, kind: str, reqs: List[ProxRequest],
@@ -427,11 +544,16 @@ class ProximityServer:
         request in ``failed_requests`` (the tiered server re-routes it)."""
         req.failed = True
         req.fail_reason = reason
-        req.done_at = self._clock()
+        now = self._clock()
+        req.done_at = now
         if req.slots is not None:
             self._slot_free.extend(int(s) for s in req.slots)
         self.failed_requests.append(req)
         del self.active[req.uid]
+        self._m_requests.labels(tier=self._tier_label, kind=req.kind,
+                                status="failed").inc()
+        req.span.event("failed", t=now, reason=reason)
+        req.span.end(now)
 
     # ---------------- accounting ----------------
     def stats(self) -> Dict[str, Any]:
@@ -462,23 +584,22 @@ class ProximityServer:
             "hits": hits, "misses": misses,
             "hit_rate": hits / max(hits + misses, 1),
         }
+        # per-kind latency views are read from the registry histograms —
+        # the same numbers the exposition exports (exact percentiles below
+        # the reservoir cap, bit-equal to the per-request lists they
+        # replaced).  A disabled registry yields empty views.
         per: Dict[str, Dict[str, float]] = {}
         for kind in KINDS:
-            lat = [r.latency_s for r in self.finished
-                   if r.kind == kind and r.latency_s is not None]
-            if not lat:
+            h = self._h_lat[kind]
+            if not h.count:
                 continue
-            wait = [r.wait_s for r in self.finished
-                    if r.kind == kind and r.wait_s is not None]
-            svc = [r.service_s for r in self.finished
-                   if r.kind == kind and r.service_s is not None]
             per[kind] = {
-                "requests": len(lat),
-                "p50_ms": float(np.percentile(lat, 50) * 1e3),
-                "p95_ms": float(np.percentile(lat, 95) * 1e3),
-                "p50_service_ms": float(np.percentile(svc, 50) * 1e3)
-                if svc else 0.0,
-                "mean_wait_ms": float(np.mean(wait) * 1e3) if wait else 0.0,
+                "requests": int(h.count),
+                "p50_ms": float(h.percentile(50) * 1e3),
+                "p95_ms": float(h.percentile(95) * 1e3),
+                "p50_service_ms":
+                    float(self._h_svc[kind].percentile(50) * 1e3),
+                "mean_wait_ms": float(self._h_wait[kind].mean * 1e3),
             }
         out["kinds"] = per
         return out
@@ -540,6 +661,7 @@ class TieredRequest:
     fail_reason: Optional[str] = None      # last recorded engine fault
     reroutes: int = 0                      # fault-driven down-ladder hops
     done_at: Optional[float] = None
+    span: Any = NULL_SPAN                  # root trace span (whole journey)
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
 
     @property
@@ -588,13 +710,28 @@ class TieredProximityServer:
                  spill_watermark: Optional[int] = None,
                  adaptive_margin: bool = False,
                  margin_window: int = 256,
-                 margin_target: float = 0.95):
+                 margin_target: float = 0.95,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         if not tiers:
             raise ValueError("need at least one tier")
         self.tiers = list(tiers)
         self.escalate_margin = float(escalate_margin)
         self._clock = clock
         self.spill_watermark = spill_watermark
+        # one registry shared across every tier (tier label disambiguates);
+        # tracing is on by default with a small ring — every request gets a
+        # root span whose children are the per-tier attempts, so a single
+        # trace shows the full causal path (admit → tier → escalate →
+        # reroute → final).  Both fold into the --obs-overhead budget.
+        self.registry = registry if registry is not None else \
+            MetricsRegistry()
+        if tracer is not None:
+            self.tracer = tracer
+        elif self.registry.enabled:
+            self.tracer = Tracer(clock=clock, capacity=64)
+        else:
+            self.tracer = _NULL_TRACER
         self.adaptive_margin = bool(adaptive_margin)
         self.margin_target = float(margin_target)
         self._margin_obs: "deque[Tuple[float, bool]]" = \
@@ -610,7 +747,8 @@ class TieredProximityServer:
                             n_classes=t.n_classes, propagator=t.propagator,
                             embedding=t.embedding, clock=clock,
                             fault_injector=fault_injector, retry=retry,
-                            breaker=self._breakers[i], name=t.name)
+                            breaker=self._breakers[i], name=t.name,
+                            registry=self.registry, tracer=self.tracer)
             for i, t in enumerate(self.tiers)]
         # pre-warm lazy routing tables so worker threads never race the
         # first build of TreeArrays._flat
@@ -633,24 +771,76 @@ class TieredProximityServer:
         self.finished: List[TieredRequest] = []
         self._finished_lock = threading.Lock()
 
-        self.escalations = 0
-        self.sheds = 0
-        self.timeouts = 0
-        self.spills = 0            # watermark-driven down-ladder hops
-        self.reroutes = 0          # fault-driven down-ladder hops
-        self.failures = 0          # requests no tier could answer
-        self.recoveries = 0        # requests answered despite a fault
-        self.budget_skips = 0      # tiers skipped for deadline budget
-        self.worker_crashes = 0    # worker-loop exceptions survived
-        self.worker_restarts = 0   # dead worker threads respawned
+        # ladder-level events: registry counters under one family; the
+        # legacy int attributes (``srv.escalations`` ...) remain as
+        # read-only properties over them
+        lad = self.registry.counter("serve_ladder_total",
+                                    "ladder-level events", labels=("event",))
+        self._c_escalations = lad.labels(event="escalation")
+        self._c_sheds = lad.labels(event="shed")
+        self._c_timeouts = lad.labels(event="timeout")
+        self._c_spills = lad.labels(event="spill")
+        self._c_reroutes = lad.labels(event="reroute")
+        self._c_failures = lad.labels(event="failure")
+        self._c_recoveries = lad.labels(event="recovery")
+        self._c_budget_skips = lad.labels(event="budget_skip")
+        self._c_worker_crashes = lad.labels(event="worker_crash")
+        self._c_worker_restarts = lad.labels(event="worker_restart")
         self._tier_requests = [0] * len(self.tiers)
         # EWMA of observed per-tier request latency, feeding deadline
-        # budgets when Tier.budget_s is unset
-        self._tier_lat: List[Optional[float]] = [None] * len(self.tiers)
+        # budgets when Tier.budget_s is unset; mirrored into the
+        # tier_budget_seconds gauge on every update
+        self._tier_lat = [EWMA(alpha=0.2) for _ in self.tiers]
+        g_budget = self.registry.gauge(
+            "tier_budget_seconds", "declared/learned tier deadline budget",
+            labels=("tier",))
+        self._g_budget = [g_budget.labels(tier=t.name) for t in self.tiers]
 
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
         self._worker_threads: Dict[int, threading.Thread] = {}
+
+    # legacy ladder-counter views (same names/int semantics as the
+    # pre-registry fields, now reading the shared registry)
+    @property
+    def escalations(self) -> int:
+        return int(self._c_escalations.value)
+
+    @property
+    def sheds(self) -> int:
+        return int(self._c_sheds.value)
+
+    @property
+    def timeouts(self) -> int:
+        return int(self._c_timeouts.value)
+
+    @property
+    def spills(self) -> int:
+        return int(self._c_spills.value)
+
+    @property
+    def reroutes(self) -> int:
+        return int(self._c_reroutes.value)
+
+    @property
+    def failures(self) -> int:
+        return int(self._c_failures.value)
+
+    @property
+    def recoveries(self) -> int:
+        return int(self._c_recoveries.value)
+
+    @property
+    def budget_skips(self) -> int:
+        return int(self._c_budget_skips.value)
+
+    @property
+    def worker_crashes(self) -> int:
+        return int(self._c_worker_crashes.value)
+
+    @property
+    def worker_restarts(self) -> int:
+        return int(self._c_worker_restarts.value)
 
     # ---------------- submission / routing ----------------
     def _tier_for(self, kind: str, n_rows: int,
@@ -688,6 +878,9 @@ class TieredProximityServer:
         treq = TieredRequest(uid=next(self._uids), kind=kind, X=X, k=int(k),
                              priority=int(priority), deadline_at=deadline_at,
                              submitted_at=now)
+        treq.span = self.tracer.root("request", kind=kind, uid=treq.uid,
+                                     rows=X.shape[0])
+        treq.span.event("submit", t=now, priority=treq.priority)
         self._requests[treq.uid] = treq
         with self._inbox_lock:
             self._inbox.append(treq)
@@ -699,7 +892,7 @@ class TieredProximityServer:
         b = self.tiers[i].budget_s
         if b is not None:
             return float(b)
-        lat = self._tier_lat[i]
+        lat = self._tier_lat[i].value
         return 0.0 if lat is None else float(lat)
 
     def _route_tier(self, treq: TieredRequest) -> int:
@@ -720,7 +913,10 @@ class TieredProximityServer:
                     kind == "predict" and self.escalate_margin > 0) else 0.0
                 need = self._budget(i) + hop
                 if need > 0 and remaining < need:
-                    self.budget_skips += 1
+                    self._c_budget_skips.inc()
+                    treq.span.event("budget_skip",
+                                    tier=self.tiers[i].name,
+                                    need_s=need, remaining_s=remaining)
                     i = self._tier_for(kind, n_rows, after=i)
                 else:
                     break
@@ -758,13 +954,17 @@ class TieredProximityServer:
                     # overload spill: degrade to the next capable tier
                     # instead of queuing toward a deadline shed (the
                     # deepest capable tier always accepts)
-                    self.spills += 1
+                    self._c_spills.inc()
+                    treq.span.event("spill", tier=self.tiers[i].name,
+                                    to=self.tiers[nxt].name, depth=depth)
                     self._enqueue(nxt, treq)
                     return
         with self._locks[i]:
+            tspan = treq.span.child(f"tier:{self.tiers[i].name}",
+                                    tier=self.tiers[i].name)
             inner_uid = self._servers[i].submit(
                 treq.kind, treq.X, k=treq.k, priority=treq.priority,
-                deadline_at=treq.deadline_at)
+                deadline_at=treq.deadline_at, span=tspan)
             self._pending[i][inner_uid] = treq
             self._tier_requests[i] += 1
             treq.tier_path.append(self.tiers[i].name)
@@ -799,11 +999,13 @@ class TieredProximityServer:
                 # past deadline with an earlier tier's answer in hand:
                 # answer from the best tier already available
                 treq.timed_out = True
-                self.timeouts += 1
+                self._c_timeouts.inc()
+                treq.span.event("timeout", tier=tname)
                 self._finalize(treq, best=True)
             else:
                 treq.shed = True
-                self.sheds += 1
+                self._c_sheds.inc()
+                treq.span.event("shed", tier=tname)
                 self._finalize(treq, best=False)
             return
         if status == "failed":
@@ -813,21 +1015,24 @@ class TieredProximityServer:
             nxt = self._tier_for(treq.kind, treq.X.shape[0], after=i)
             if nxt is not None:
                 treq.reroutes += 1
-                self.reroutes += 1
+                self._c_reroutes.inc()
+                treq.span.event("reroute", tier=tname,
+                                to=self.tiers[nxt].name,
+                                reason=inner.fail_reason)
                 self._enqueue(nxt, treq)
                 return
             if treq.answers:
                 self._finalize(treq, best=True)
             else:
                 treq.failed = True
-                self.failures += 1
+                self._c_failures.inc()
+                treq.span.event("failure", tier=tname,
+                                reason=inner.fail_reason)
                 self._finalize(treq, best=False)
             return
-        if self._tier_lat[i] is None:
-            self._tier_lat[i] = inner.latency_s
-        elif inner.latency_s is not None:
-            self._tier_lat[i] = 0.8 * self._tier_lat[i] + \
-                0.2 * inner.latency_s
+        if inner.latency_s is not None:
+            self._tier_lat[i].update(inner.latency_s)
+            self._g_budget[i].set(self._budget(i))
         self._record_agreement(treq, tname, inner.result)
         treq.answers[tname] = inner.result
         nxt = self._last_tier_for(treq.kind, treq.X.shape[0], after=i)
@@ -838,11 +1043,15 @@ class TieredProximityServer:
                 if treq.deadline_at is None or \
                         self._clock() <= treq.deadline_at:
                     treq.escalations += 1
-                    self.escalations += 1
+                    self._c_escalations.inc()
+                    treq.span.event("escalate", tier=tname,
+                                    to=self.tiers[nxt].name,
+                                    margin=float(margin.min()))
                     self._enqueue(nxt, treq)
                     return
                 treq.timed_out = True
-                self.timeouts += 1
+                self._c_timeouts.inc()
+                treq.span.event("timeout", tier=tname)
         self._finalize(treq, best=True)
 
     # ---------------- adaptive escalation margin ----------------
@@ -896,8 +1105,14 @@ class TieredProximityServer:
                     treq.result = treq.answers[name]
                     break
         if treq.fail_reason is not None and treq.result is not None:
-            self.recoveries += 1    # answered despite an engine fault
+            self._c_recoveries.inc()    # answered despite an engine fault
         treq.done_at = self._clock()
+        treq.span.event("final", t=treq.done_at,
+                        tier=treq.final_tier or "",
+                        escalations=treq.escalations,
+                        reroutes=treq.reroutes, shed=treq.shed,
+                        timed_out=treq.timed_out, failed=treq.failed)
+        treq.span.end(treq.done_at)
         with self._finished_lock:
             self.finished.append(treq)
         treq.done.set()
@@ -980,7 +1195,7 @@ class TieredProximityServer:
             # "respawn" workers start() hasn't launched yet
             if t.ident is None or t.is_alive() or self._stop.is_set():
                 continue
-            self.worker_restarts += 1
+            self._c_worker_restarts.inc()
             nt = threading.Thread(
                 target=self._worker_loop, args=(i,),
                 name=f"prox-tier-{self.tiers[i].name}-r{self.worker_restarts}",
@@ -1001,7 +1216,7 @@ class TieredProximityServer:
                     self._settle(i, inner, status)
                     settled += 1
             except Exception:       # noqa: BLE001 — worker must survive
-                self.worker_crashes += 1
+                self._c_worker_crashes.inc()
                 time.sleep(0.001)
                 continue
             if retired == 0 and settled == 0 and idle:

@@ -91,6 +91,16 @@ class FaultInjector:
         self.injected: Dict[str, int] = {"error": 0, "latency": 0,
                                          "corrupt": 0}
         self.by_op: Dict[str, int] = {}
+        self._metrics = None            # optional registry counter family
+
+    def bind_registry(self, registry) -> "FaultInjector":
+        """Mirror injected-fault counts into the registry's
+        ``fault_injected_total{type,op}`` counter family.  Optional — an
+        unbound injector keeps its plain dict accounting only."""
+        self._metrics = registry.counter(
+            "fault_injected_total", "synthetic faults injected",
+            labels=("type", "op"))
+        return self
 
     def _in_scope(self, op: str, scope: Optional[str]) -> bool:
         if self.ops and op not in self.ops:
@@ -111,8 +121,12 @@ class FaultInjector:
             if fire_err:
                 self.injected["error"] += 1
                 self.by_op[op] = self.by_op.get(op, 0) + 1
+                if self._metrics is not None:
+                    self._metrics.labels(type="error", op=op).inc()
             if fire_lat:
                 self.injected["latency"] += 1
+                if self._metrics is not None:
+                    self._metrics.labels(type="latency", op=op).inc()
         # side effects happen outside the lock
         if fire_lat and self.latency_s > 0:
             self.sleep(self.latency_s)
@@ -131,6 +145,8 @@ class FaultInjector:
                 return arrays
             self.injected["corrupt"] += 1
             self.by_op[op] = self.by_op.get(op, 0) + 1
+            if self._metrics is not None:
+                self._metrics.labels(type="corrupt", op=op).inc()
             picks = self._rng.random(2)
         out = list(arrays)
         floats = [i for i, a in enumerate(out)
@@ -196,6 +212,28 @@ class CircuitBreaker:
         self.trips = 0
         self.opened_at: Optional[float] = None
         self._lock = threading.Lock()
+        self._m_transitions = None      # optional registry hooks
+        self._g_open = None
+        self._tier = ""
+
+    def bind_registry(self, registry, tier: str = "") -> "CircuitBreaker":
+        """Mirror state transitions into
+        ``breaker_transitions_total{tier,state}`` and the ``breaker_open``
+        gauge (1 while open).  Optional — an unbound breaker keeps its
+        plain ``snapshot()`` accounting only."""
+        self._tier = str(tier)
+        self._m_transitions = registry.counter(
+            "breaker_transitions_total", "circuit-breaker state entries",
+            labels=("tier", "state"))
+        self._g_open = registry.gauge(
+            "breaker_open", "1 while the breaker is open",
+            labels=("tier",)).labels(tier=self._tier)
+        return self
+
+    def _note_state(self, new: str) -> None:
+        if self._m_transitions is not None:
+            self._m_transitions.labels(tier=self._tier, state=new).inc()
+            self._g_open.set(1.0 if new == "open" else 0.0)
 
     def allow(self) -> bool:
         """Whether the next engine call may proceed."""
@@ -203,6 +241,7 @@ class CircuitBreaker:
             if self.state == "open":
                 if self.clock() - self.opened_at >= self.cooldown_s:
                     self.state = "half_open"     # one probe allowed
+                    self._note_state("half_open")
                     return True
                 return False
             return True                          # closed or half_open
@@ -213,6 +252,7 @@ class CircuitBreaker:
             if self.state != "closed":
                 self.state = "closed"
                 self.opened_at = None
+                self._note_state("closed")
 
     def record_failure(self) -> None:
         with self._lock:
@@ -223,6 +263,7 @@ class CircuitBreaker:
                 self.state = "open"
                 self.trips += 1
                 self.opened_at = self.clock()
+                self._note_state("open")
             elif self.state == "open":
                 self.opened_at = self.clock()    # extend the cooldown
 

@@ -1,0 +1,422 @@
+"""Observability subsystem: metrics registry, per-request tracing, engine
+profiling hooks, and their wiring into the serving stack.
+
+Everything here is deterministic: histograms are checked against numpy on
+fixed samples, tracer timestamps come from injectable fake clocks, and the
+serving trace tests drive the synchronous tick loop (no worker threads).
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.api import ForestKernel
+from repro.data.synthetic import gaussian_classes
+from repro.obs.metrics import (EWMA, Counter, Gauge, Histogram,
+                               MetricsRegistry, NULL_METRIC,
+                               default_latency_buckets, global_registry,
+                               parse_exposition, set_global_registry)
+from repro.obs.profile import ENGINE_OPS, InstrumentedEngine, instrument
+from repro.obs.trace import NULL_SPAN, Tracer
+from repro.serve.proximity import ProximityServer
+from repro.serve.reliability import RetryPolicy
+
+
+@pytest.fixture(scope="module")
+def obs_setup():
+    X, y = gaussian_classes(400, d=8, n_classes=3, sep=3.0, seed=7)
+    fk = ForestKernel(kernel_method="gap", n_trees=12, seed=0).fit(X, y)
+    Xq = np.ascontiguousarray(X[:64] + 1e-3)
+    return {"fk": fk, "X": X, "y": y, "Xq": Xq}
+
+
+def _fake_clock(start=0.0):
+    t = [start]
+
+    def clock():
+        return t[0]
+
+    clock.t = t
+    return clock
+
+
+# ---------------------------------------------------------------- metrics
+class TestPrimitives:
+    def test_counter_and_gauge(self):
+        c, g = Counter(), Gauge()
+        c.inc()
+        c.inc(2.5)
+        assert c.value == 3.5
+        g.set(7.0)
+        g.inc()
+        g.dec(3.0)
+        assert g.value == 5.0
+
+    def test_ewma_seeds_then_blends(self):
+        e = EWMA(alpha=0.5)
+        assert e.value is None
+        assert e.update(10.0) == 10.0
+        assert e.update(20.0) == pytest.approx(15.0)
+        assert e.count == 2
+
+    def test_histogram_exact_percentiles_vs_numpy(self):
+        rng = np.random.default_rng(0)
+        xs = rng.lognormal(mean=-5.0, sigma=1.5, size=2000)
+        h = Histogram()
+        for x in xs:
+            h.observe(float(x))
+        for p in (50, 90, 95, 99):
+            assert h.percentile(p) == pytest.approx(
+                float(np.percentile(xs, p)))
+        assert h.mean == pytest.approx(float(xs.mean()))
+        assert h.count == len(xs)
+        assert h.min == pytest.approx(xs.min())
+        assert h.max == pytest.approx(xs.max())
+
+    def test_histogram_bucket_counts(self):
+        h = Histogram(buckets=(1.0, 2.0, 4.0))
+        for x in (0.5, 1.5, 1.7, 3.0, 100.0):
+            h.observe(x)
+        assert h.counts == [1, 2, 1, 1]      # last bucket is +Inf overflow
+
+    def test_histogram_interpolates_past_reservoir(self):
+        h = Histogram(buckets=tuple(float(b) for b in range(1, 101)),
+                      sample_cap=100)
+        xs = np.linspace(0.5, 99.5, 10_000)
+        for x in xs:
+            h.observe(float(x))
+        # reservoir (first 100 samples) no longer covers the stream: the
+        # quantile falls back to bucket interpolation, error <= bucket width
+        assert abs(h.percentile(50) - float(np.percentile(xs, 50))) <= 1.0
+        assert abs(h.percentile(95) - float(np.percentile(xs, 95))) <= 1.0
+
+    def test_histogram_rejects_unsorted_buckets(self):
+        with pytest.raises(ValueError):
+            Histogram(buckets=(2.0, 1.0))
+
+    def test_default_buckets_ascending_subsecond(self):
+        b = default_latency_buckets()
+        assert list(b) == sorted(b)
+        assert b[0] < 1e-3 and b[-1] >= 10.0
+
+    def test_thread_safety_exact_counts(self):
+        reg = MetricsRegistry()
+        c = reg.counter("c_total", "c")
+        h = reg.histogram("h_seconds", "h")
+        n_threads, per_thread = 8, 2000
+
+        def work():
+            for i in range(per_thread):
+                c.inc()
+                h.observe(0.001 * (i % 7))
+
+        threads = [threading.Thread(target=work) for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert c.value == n_threads * per_thread
+        assert h.count == n_threads * per_thread
+        assert sum(h.labels().counts) == n_threads * per_thread
+
+
+class TestRegistry:
+    def test_labeled_families(self):
+        reg = MetricsRegistry()
+        fam = reg.counter("req_total", "requests", labels=("tier", "kind"))
+        fam.labels(tier="a", kind="x").inc(2)
+        fam.labels(tier="b", kind="x").inc()
+        # same labels -> same child
+        assert fam.labels(tier="a", kind="x").value == 2
+        with pytest.raises(ValueError):
+            fam.labels(tier="a")               # missing label
+        with pytest.raises(ValueError):
+            fam.labels(tier="a", kind="x", extra="y")
+
+    def test_disabled_registry_returns_null_metric(self):
+        reg = MetricsRegistry(enabled=False)
+        c = reg.counter("c_total", "c")
+        h = reg.histogram("h_seconds", "h", labels=("tier",))
+        c.inc()
+        h.labels(tier="z").observe(1.0)
+        assert c is NULL_METRIC
+        assert c.value == 0 and h.labels(tier="z").count == 0
+        assert h.labels(tier="z").percentile(95) == 0.0
+        assert reg.snapshot() == {}
+        assert reg.exposition() == ""
+
+    def test_snapshot_shape(self):
+        reg = MetricsRegistry()
+        reg.counter("a_total", "a").inc(3)
+        reg.gauge("g", "g").set(1.5)
+        reg.histogram("h_seconds", "h").observe(0.25)
+        snap = reg.snapshot()
+        assert snap["a_total"]["kind"] == "counter"
+        assert snap["g"]["kind"] == "gauge"
+        assert snap["h_seconds"]["kind"] == "histogram"
+
+    def test_exposition_round_trip(self):
+        reg = MetricsRegistry()
+        reg.counter("req_total", "requests",
+                    labels=("tier", "kind")).labels(
+                        tier="full", kind="predict").inc(5)
+        reg.gauge("depth", "queue depth").set(3.0)
+        reg.histogram("lat_seconds", "latency",
+                      labels=("tier",)).labels(tier="full").observe(0.125)
+        series = parse_exposition(reg.exposition())
+        # labels come back in declared order: ("tier", "kind")
+        assert series[('req_total', (('tier', 'full'),
+                                     ('kind', 'predict')))] == 5.0
+        assert series[("depth", ())] == 3.0
+        assert series[('lat_seconds_count', (('tier', 'full'),))] == 1.0
+        assert series[('lat_seconds_sum', (('tier', 'full'),))] == \
+            pytest.approx(0.125)
+        # at least one cumulative bucket line carries the le label
+        assert any(name == "lat_seconds_bucket" and
+                   any(k == "le" for k, _ in labels)
+                   for name, labels in series)
+
+    def test_global_registry_swap(self):
+        old = global_registry()
+        try:
+            mine = MetricsRegistry()
+            set_global_registry(mine)
+            assert global_registry() is mine
+        finally:
+            set_global_registry(old)
+
+
+# ---------------------------------------------------------------- tracing
+class TestTrace:
+    def test_span_nesting_and_deterministic_timestamps(self):
+        clock = _fake_clock(100.0)
+        tr = Tracer(clock=clock, capacity=8)
+        root = tr.root("request", kind="predict")
+        assert root.t0 == 100.0
+        clock.t[0] = 100.5
+        child = root.child("tier:full", tier="full")
+        child.event("admit", slots=4)
+        clock.t[0] = 101.0
+        child.end()
+        root.end()
+        (got,) = tr.spans()
+        assert got is root
+        d = got.to_dict()
+        assert d["t0"] == 100.0 and d["t1"] == 101.0
+        assert d["children"][0]["name"] == "tier:full"
+        assert d["children"][0]["t0"] == 100.5
+        assert d["children"][0]["events"][0]["t"] == 100.5
+
+    def test_record_pre_measured_interval(self):
+        tr = Tracer(clock=_fake_clock(), capacity=4)
+        root = tr.root("request")
+        c = root.record("engine:predict", 1.0, 2.5, rows=8)
+        assert c.t0 == 1.0 and c.t1 == 2.5
+        root.end(3.0)
+        assert tr.spans()[0].children[0].attrs["rows"] == 8
+
+    def test_ring_buffer_bounded(self):
+        tr = Tracer(clock=_fake_clock(), capacity=4)
+        for i in range(10):
+            tr.root(f"r{i}").end(float(i))
+        spans = tr.spans()
+        assert len(spans) == 4
+        assert [s.name for s in spans] == ["r6", "r7", "r8", "r9"]
+
+    def test_sampling(self):
+        tr = Tracer(clock=_fake_clock(), capacity=16, sample_every=3)
+        roots = [tr.root(f"r{i}") for i in range(9)]
+        sampled = [r for r in roots if r is not NULL_SPAN]
+        assert len(sampled) == 3
+        assert tr.started == 3 and tr.dropped == 6
+
+    def test_disabled_tracer_is_null(self):
+        tr = Tracer(enabled=False)
+        sp = tr.root("x")
+        assert sp is NULL_SPAN
+        # the null span absorbs the full API without effect
+        sp.event("e")
+        sp.child("c").end()
+        sp.record("r", 0.0, 1.0)
+        sp.end()
+        assert tr.spans() == []
+
+    def test_chrome_trace_export(self, tmp_path):
+        clock = _fake_clock(10.0)
+        tr = Tracer(clock=clock, capacity=4)
+        root = tr.root("request", kind="topk")
+        clock.t[0] = 10.001
+        root.event("escalate", to="full")
+        root.record("engine:topk", 10.0005, 10.0009)
+        clock.t[0] = 10.002
+        root.end()
+        path = tmp_path / "trace.json"
+        obj = tr.export(str(path))
+        on_disk = json.loads(path.read_text())
+        assert on_disk == obj
+        phases = {e["ph"] for e in obj["traceEvents"]}
+        assert {"M", "X", "i"} <= phases
+        xs = [e for e in obj["traceEvents"] if e["ph"] == "X"]
+        assert {e["name"] for e in xs} == {"request", "engine:topk"}
+        # complete events carry microsecond ts/dur
+        req = next(e for e in xs if e["name"] == "request")
+        assert req["dur"] == pytest.approx(2000.0)
+
+
+# ----------------------------------------------------------- engine hooks
+class TestInstrument:
+    def test_ops_timed_and_counted(self, obs_setup):
+        fk, y, Xq = obs_setup["fk"], obs_setup["y"], obs_setup["Xq"]
+        reg = MetricsRegistry()
+        eng = instrument(fk.engine, reg, tier="full")
+        assert isinstance(eng, InstrumentedEngine)
+        assert instrument(eng, reg) is eng            # idempotent
+        out = eng.predict(y, n_classes=3, X=Xq)
+        assert out.shape == (len(Xq), 3)
+        hist = reg.histogram("engine_op_seconds", labels=("op", "backend",
+                                                          "tier"))
+        timer = hist.labels(op="predict", backend=fk.engine.backend,
+                            tier="full")
+        assert timer.count == 1 and timer.sum > 0
+        calls = reg.counter("engine_op_calls_total",
+                            labels=("op", "backend", "tier"))
+        assert calls.labels(op="predict", backend=fk.engine.backend,
+                            tier="full").value == 1
+
+    def test_delegation_untouched(self, obs_setup):
+        fk = obs_setup["fk"]
+        eng = instrument(fk.engine, MetricsRegistry(), tier="t")
+        assert eng.wrapped is fk.engine
+        assert eng.W is fk.engine.W
+        assert eng.backend == fk.engine.backend
+        for op in ENGINE_OPS:
+            if hasattr(fk.engine, op):
+                assert callable(getattr(eng, op))
+
+
+# --------------------------------------------------------- serving wiring
+class TestServingWiring:
+    def test_stats_backward_compat(self, obs_setup):
+        fk, y, Xq = obs_setup["fk"], obs_setup["y"], obs_setup["Xq"]
+        srv = ProximityServer(fk.engine, y=y, n_slots=32)
+        srv.serve([("predict", Xq[:8]), ("topk", Xq[:4], 3)])
+        st = srv.stats()
+        assert st["requests"] == 2 and st["rows"] == 12
+        ks = st["kinds"]["predict"]
+        for key in ("requests", "p50_ms", "p95_ms", "p50_service_ms",
+                    "mean_wait_ms"):
+            assert key in ks
+        assert ks["requests"] == 1
+
+    def test_registry_families_populated(self, obs_setup):
+        fk, y, Xq = obs_setup["fk"], obs_setup["y"], obs_setup["Xq"]
+        srv = ProximityServer(fk.engine, y=y, n_slots=32, name="solo")
+        srv.serve([("predict", Xq[:8])])
+        reg = srv.registry
+        done = reg.counter("serve_requests_total",
+                           labels=("tier", "kind", "status"))
+        assert done.labels(tier="solo", kind="predict",
+                           status="done").value == 1
+        lat = reg.histogram("serve_request_seconds", labels=("tier", "kind"))
+        assert lat.labels(tier="solo", kind="predict").count == 1
+        # engine profiling flows into the same registry
+        ops = reg.counter("engine_op_calls_total",
+                          labels=("op", "backend", "tier"))
+        assert ops.labels(op="predict", backend=fk.engine.backend,
+                          tier="solo").value >= 1
+
+    def test_disabled_registry_serves_identically(self, obs_setup):
+        fk, y, Xq = obs_setup["fk"], obs_setup["y"], obs_setup["Xq"]
+        on = ProximityServer(fk.engine, y=y, n_slots=32)
+        off = ProximityServer(fk.engine, y=y, n_slots=32,
+                              registry=MetricsRegistry(enabled=False))
+        r_on = on.serve([("predict", Xq[:8])])[0]["labels"]
+        r_off = off.serve([("predict", Xq[:8])])[0]["labels"]
+        np.testing.assert_array_equal(r_on, r_off)
+        assert not isinstance(off.engine, InstrumentedEngine)
+        assert off.stats()["kinds"] == {}     # no latency views when off
+
+    def test_tiered_full_causal_path_trace(self, obs_setup):
+        fk, y, Xq = obs_setup["fk"], obs_setup["y"], obs_setup["Xq"]
+        srv = fk.serve_tiered(prefix_depth=2, escalate_margin=0.95,
+                              n_slots=32)
+        srv.serve([("predict", Xq[:8])])
+        spans = srv.tracer.spans()
+        assert len(spans) == 1
+        root = spans[0]
+        assert root.name == "request" and root.t1 is not None
+        ev = [name for _, name, _ in root.events]
+        assert ev[0] == "submit" and ev[-1] == "final"
+        assert "escalate" in ev               # margin .95 forces escalation
+        tiers = [c for c in root.children if c.name.startswith("tier:")]
+        assert len(tiers) >= 2                # shallow attempt + escalation
+        for tier_span in tiers:
+            tev = [name for _, name, _ in tier_span.events]
+            assert "submit" in tev and "admit" in tev
+            engine_kids = [c for c in tier_span.children
+                           if c.name.startswith("engine:")]
+            assert engine_kids and all(c.t1 >= c.t0 for c in engine_kids)
+        # ladder counters mirror the span story
+        assert srv.escalations >= 1
+        assert srv.registry.counter(
+            "serve_ladder_total",
+            labels=("event",)).labels(event="escalation").value >= 1
+
+    def test_trace_records_fault_and_retry(self, obs_setup):
+        fk, y, Xq = obs_setup["fk"], obs_setup["y"], obs_setup["Xq"]
+
+        class Flaky:
+            def __init__(self, engine, fail):
+                self._engine = engine
+                self.fails_left = fail
+
+            def __getattr__(self, name):
+                return getattr(self._engine, name)
+
+            def predict(self, *a, **kw):
+                if self.fails_left > 0:
+                    self.fails_left -= 1
+                    raise RuntimeError("flaky")
+                return self._engine.predict(*a, **kw)
+
+        srv = ProximityServer(
+            Flaky(fk.engine, fail=1), y=y, n_slots=32,
+            retry=RetryPolicy(max_retries=2, backoff_s=0.0,
+                              sleep=lambda s: None),
+            tracer=Tracer(capacity=8))
+        (res,) = srv.serve([("predict", Xq[:4])])
+        assert res is not None
+        (root,) = srv.tracer.spans()
+        ev = [name for _, name, _ in root.events]
+        assert "retry" in ev
+        assert srv.faults == 1 and srv.retries == 1
+        fault_counter = srv.registry.counter(
+            "serve_engine_faults_total", labels=("tier", "event"))
+        assert fault_counter.labels(tier="server", event="retry").value == 1
+
+
+# ------------------------------------------------------- training/snapshot
+class TestGlobalHooks:
+    def test_training_and_snapshot_metrics(self, tmp_path):
+        old = global_registry()
+        reg = MetricsRegistry()
+        set_global_registry(reg)
+        try:
+            X, y = gaussian_classes(200, d=6, n_classes=2, seed=1)
+            fk = ForestKernel(kernel_method="gap", n_trees=4,
+                              seed=0).fit(X, y)
+            levels = reg.counter("train_levels_total", labels=("backend",))
+            snap = reg.snapshot()
+            assert "train_level_seconds" in snap
+            assert sum(c.value for c in levels._children.values()) > 0
+
+            path = tmp_path / "fk.npz"
+            from repro.core.snapshot import load_kernel, save_kernel
+            save_kernel(fk, path)
+            load_kernel(path)
+            h = reg.histogram("snapshot_seconds", labels=("op",))
+            assert h.labels(op="save").count == 1
+            assert h.labels(op="load").count == 1
+        finally:
+            set_global_registry(old)

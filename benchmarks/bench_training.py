@@ -17,6 +17,13 @@ Measures forest fit wall-clock through three paths on identical data
 and emits a JSON report with per-path seconds and speedups over the numpy
 trainer.  The acceptance bar for this repo is native_batched >= 4x numpy at
 (50k x 20, 100 trees).
+
+When jax is importable, a reduced-size ``jax`` section is also measured:
+``tree_backend="jax"`` routes every level's histogram through the device
+kernels (pallas on TPU/GPU, the XLA scatter-add reference on CPU) and the
+trees are asserted bit-identical to the numpy trainer under x64 scoring.
+On a CPU-only host this times the *reference* device path — the number is
+a dispatch-overhead floor, not an accelerator result.
 """
 from __future__ import annotations
 
@@ -39,8 +46,45 @@ def _trees_equal(a, b) -> bool:
         for t1, t2 in zip(a, b) for f in fields)
 
 
+def _bench_jax(n: int, d: int, trees: int) -> dict | None:
+    """Reduced-config jax-backend timing with a numpy conformance assert."""
+    try:
+        import jax
+    except Exception:
+        print("jax path skipped: jax not importable", flush=True)
+        return None
+    old_x64 = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        X, y = gaussian_classes(n, d=d, n_classes=4, seed=0)
+
+        def fit(backend):
+            return RandomForest(n_trees=trees, seed=0,
+                                tree_backend=backend).fit(X, y)
+
+        t0 = time.perf_counter()
+        f_np = fit("numpy")
+        s_np = round(time.perf_counter() - t0, 3)
+        fit("jax")                                   # warm compile caches
+        t0 = time.perf_counter()
+        f_jx = fit("jax")
+        s_jx = round(time.perf_counter() - t0, 3)
+        assert _trees_equal(f_np.trees_, f_jx.trees_), \
+            "jax trees differ from numpy trainer"
+        dev = jax.devices()[0].platform
+        print(f"jax ({dev}):      {s_jx:.2f}s  (numpy at this size: "
+              f"{s_np:.2f}s)", flush=True)
+        return {"config": {"n": n, "d": d, "trees": trees, "device": dev,
+                           "conformance": "bit-identical to numpy (asserted, "
+                                          "x64 scoring)"},
+                "fit_seconds": {"numpy": s_np, "jax": s_jx}}
+    finally:
+        jax.config.update("jax_enable_x64", old_x64)
+
+
 def run(n: int = 50_000, d: int = 20, trees: int = 100,
-        out_path: str = "BENCH_training.json", repeats: int = 1) -> dict:
+        out_path: str = "BENCH_training.json", repeats: int = 1,
+        jax_n: int = 8_000, jax_trees: int = 20) -> dict:
     X, y = gaussian_classes(n, d=d, n_classes=4, seed=0)
 
     def fit(backend: str, tree_block: int = 0):
@@ -80,6 +124,9 @@ def run(n: int = 50_000, d: int = 20, trees: int = 100,
         "speedup_vs_numpy": {k: round(results["numpy"] / v, 2)
                              for k, v in results.items() if k != "numpy"},
     }
+    jax_report = _bench_jax(jax_n, d, jax_trees)
+    if jax_report is not None:
+        report["jax"] = jax_report
     with open(out_path, "w") as fh:
         json.dump(report, fh, indent=2)
         fh.write("\n")
@@ -93,6 +140,9 @@ if __name__ == "__main__":
     ap.add_argument("--d", type=int, default=20)
     ap.add_argument("--trees", type=int, default=100)
     ap.add_argument("--repeats", type=int, default=1)
+    ap.add_argument("--jax-n", type=int, default=8_000)
+    ap.add_argument("--jax-trees", type=int, default=20)
     ap.add_argument("--out", type=str, default="BENCH_training.json")
     a = ap.parse_args()
-    run(n=a.n, d=a.d, trees=a.trees, out_path=a.out, repeats=a.repeats)
+    run(n=a.n, d=a.d, trees=a.trees, out_path=a.out, repeats=a.repeats,
+        jax_n=a.jax_n, jax_trees=a.jax_trees)

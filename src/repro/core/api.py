@@ -50,7 +50,7 @@ class ForestKernel:
     dtype: type = np.float64
     engine_backend: str = "scipy"    # 'scipy' | 'jax' | 'pallas' | 'native'
     routing_backend: str = "auto"    # 'auto'|'native'|'numpy'|'jax'|'pallas'
-    tree_backend: str = "auto"       # trainer: 'auto' | 'numpy' | 'native'
+    tree_backend: str = "auto"       # trainer: 'auto' | 'numpy' | 'native' | 'jax'
     n_jobs: int = 0                  # tree-fitting workers (0 = auto)
 
     forest: Optional[BaseForest] = None

@@ -60,8 +60,9 @@ class BaseForest:
     splitter: str = "best"
     n_jobs: int = 0                  # 0 -> auto (min(8, cpus)), 1 -> serial
     routing_backend: str = "auto"    # 'auto'|'native'|'numpy'|'jax'|'pallas'
-    tree_backend: str = "auto"       # trainer: 'auto'|'numpy'|'native'
+    tree_backend: str = "auto"       # trainer: 'auto'|'numpy'|'native'|'jax'
     tree_block: int = 0              # native batch width (0 auto, <0 all)
+    float32_hist: bool = False       # numpy/native: float32 split scoring
 
     # fitted state
     trees_: Optional[List[Tree]] = None
@@ -81,7 +82,8 @@ class BaseForest:
             min_samples_leaf=self.min_samples_leaf,
             min_samples_split=self.min_samples_split,
             max_features=self.max_features, n_bins=self.n_bins,
-            splitter=self.splitter, tree_backend=self.tree_backend)
+            splitter=self.splitter, tree_backend=self.tree_backend,
+            float32_hist=self.float32_hist)
 
     def fit(self, X: np.ndarray, y: np.ndarray) -> "BaseForest":
         rng = np.random.default_rng(self.seed)
@@ -102,14 +104,15 @@ class BaseForest:
         child_rngs = rng.spawn(self.n_trees)
 
         backend = resolve_tree_backend(self.tree_backend, self.binner_.n_bins)
-        if backend == "native":
-            # Batched level-synchronous growth: one native call per level
-            # spans every tree's frontier, so OpenMP threads stay saturated
-            # at deep narrow levels and `n_jobs` Python workers never stack
-            # on top of OMP threads (no n_jobs × OMP oversubscription).
+        if backend in ("native", "jax"):
+            # Batched level-synchronous growth: one native/device call per
+            # level spans every tree's frontier, so OpenMP threads (native)
+            # or kernel launches (jax) stay saturated at deep narrow levels
+            # and `n_jobs` Python workers never stack on top (no
+            # n_jobs × OMP oversubscription, no per-tree device dispatch).
             self.trees_ = fit_forest_binned(Xb, y, self.inbag_, params,
                                             child_rngs, self.binner_,
-                                            backend="native",
+                                            backend=backend,
                                             tree_block=self.tree_block)
         else:
             def fit_one(t: int) -> Tree:

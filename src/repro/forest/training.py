@@ -10,7 +10,7 @@ so growing to purity costs ``O(N d depth)`` per tree — the ``O(N T h̄)``
 training term of the paper's §3.3.
 
 The three per-level hot loops — histogram accumulation, best-split scoring,
-and sample partition — run through one of two backends selected by
+and sample partition — run through one of three backends selected by
 ``TreeParams.tree_backend``:
 
   ``numpy``   tiled ``np.bincount`` histograms (int32 flat indices when they
@@ -19,9 +19,25 @@ and sample partition — run through one of two backends selected by
   ``native``  C kernels (``train_hist`` / ``train_best_split`` /
               ``train_partition`` in ``forest/_native.py``; OpenMP, float64
               accumulators, uint8 bin codes),
+  ``jax``     the one-hot-MXU histogram/moments kernels in
+              ``repro/kernels/histogram`` (pallas on accelerators, jitted
+              scatter-add oracle elsewhere) with best-split scoring jitted
+              on-device in the same operation order as ``_best_splits``;
+              partition stays on the host so trees flow back through the
+              same ``_TreeStore`` machinery.  Conformance is
+              agreement-bounded (float32 histogram accumulation): trees are
+              identical to the CPU backends on exact-representable
+              integer-weight data, and downstream-kernel-close otherwise,
   ``auto``    native when a host compiler is available and codes fit uint8.
 
-Both backends grow **bit-identical trees**: every RNG draw happens here in
+All backends share the **histogram-subtraction trick**: when a level's
+parent histograms were retained (small frontiers, ``_SUB_MAX_PARENTS``
+gate), only the smaller child of each sibling pair is accumulated and the
+other is derived as ``parent − child`` — float64 (exact for the integer
+bootstrap weights forests actually use) on numpy/native, float32 on jax —
+halving histogram work on the shallow, full-``N`` levels that dominate.
+
+The CPU backends grow **bit-identical trees**: every RNG draw happens here in
 Python (per tree, chunk-aligned), the C kernels accumulate each histogram
 bin in the same sample order numpy's ``bincount`` does (each (node,
 feature-stripe) is owned by one thread), and split scores are evaluated with
@@ -39,6 +55,7 @@ The TPU-native counterpart (one-hot × matmul histograms) lives in
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import List, Optional, Sequence, Tuple
 
@@ -54,6 +71,15 @@ _HIST_BUDGET = 1 << 26  # max float64 elements per histogram chunk (~512MB)
 _TILE_ELEMS = 1 << 20   # max elements per transient index tile (numpy hist)
 _EARLY_PRUNE = True     # drop known-leaf children's samples from the frontier
 _BATCH_BUDGET = 1 << 28  # resident frontier bytes per multi-tree batch
+_HIST_SUBTRACT = True   # derive sibling histograms as parent - smaller child
+_SUB_MAX_PARENTS = 16   # retain parent hists only while a tree's level is
+#                         this narrow (bounds stash memory; shallow levels
+#                         scan the full sample set, so that's where the
+#                         halved histogram work pays anyway)
+_JAX_TILE = 512         # sample tile per pallas grid step (jax backend)
+_JAX_NODE_CHUNK = 64    # node sub-chunk handed to kernels/histogram/ops
+_JAX_USE_PALLAS = None  # None: pallas iff compiled lowering works, else oracle
+_JAX_INTERPRET = None   # forwarded to ops.resolve_interpret (None = probe)
 
 
 @dataclasses.dataclass
@@ -66,7 +92,10 @@ class TreeParams:
     max_features: Optional[str] = "sqrt"   # "sqrt" | "log2" | None (all) | int
     n_bins: int = 64
     splitter: str = "best"            # "best" (CART) | "random" (ExtraTrees)
-    tree_backend: str = "auto"        # "auto" | "numpy" | "native"
+    tree_backend: str = "auto"        # "auto" | "numpy" | "native" | "jax"
+    float32_hist: bool = False        # numpy/native: score splits from
+    #                                   float32-cast histograms (the jax
+    #                                   backend's accumulation precision)
 
     def n_feature_subset(self, d: int) -> int:
         mf = self.max_features
@@ -80,11 +109,13 @@ class TreeParams:
 
 
 def resolve_tree_backend(backend: Optional[str], n_bins: int) -> str:
-    """Resolve 'auto'|'numpy'|'native' to a concrete trainer backend.
+    """Resolve 'auto'|'numpy'|'native'|'jax' to a concrete trainer backend.
 
     The native kernels store bin codes as uint8, so they require
     ``n_bins <= 256``; 'auto' silently falls back to numpy outside that
-    envelope (or when no host C compiler exists), 'native' raises.
+    envelope (or when no host C compiler exists), 'native' raises.  'jax'
+    requires jax to be importable ('auto' never selects it — accelerator
+    training is opt-in).
     """
     if backend in (None, "auto"):
         from . import _native
@@ -98,10 +129,16 @@ def resolve_tree_backend(backend: Optional[str], n_bins: int) -> str:
             raise ValueError("native tree backend requires n_bins <= 256 "
                              "(uint8 bin codes)")
         return "native"
+    if backend == "jax":
+        try:
+            from ..kernels.histogram import ops as _ops  # noqa: F401
+        except Exception as exc:  # pragma: no cover - env without jax
+            raise RuntimeError(f"jax tree backend unavailable: {exc}")
+        return "jax"
     if backend == "numpy":
         return "numpy"
     raise ValueError(f"unknown tree backend {backend!r}; have "
-                     "'auto' | 'numpy' | 'native'")
+                     "'auto' | 'numpy' | 'native' | 'jax'")
 
 
 class Binner:
@@ -496,6 +533,82 @@ def _best_splits(hist: np.ndarray, msl: float, cls: bool, random_split: bool,
     return g_best, f_best, b_best, node_tot
 
 
+def _ranges_concat(starts: np.ndarray, lens: np.ndarray) -> np.ndarray:
+    """Concatenate index ranges [starts[k], starts[k]+lens[k]) into one array."""
+    total = int(lens.sum())
+    if total == 0:
+        return np.empty(0, np.int64)
+    off = np.concatenate([[0], np.cumsum(lens)[:-1]])
+    return np.repeat(starts - off, lens) + np.arange(total)
+
+
+@functools.lru_cache(maxsize=None)
+def _jax_scorer(cls: bool, random_split: bool, has_mask: bool, msl: float,
+                dt_name: str):
+    """Jitted on-device mirror of ``_best_splits``.
+
+    Same operation order (cumsum over bins, sequential channel reduction,
+    two-term score add, first-maximum argmax tie-breaks); ``dt_name`` is the
+    scoring dtype — float64 when x64 is enabled, which on exact-integer
+    histograms makes gains bit-equal to the numpy path.
+    """
+    import jax
+    import jax.numpy as jnp
+    dt = jnp.dtype(dt_name)
+
+    def _sum_last(a):
+        s = a[..., 0]
+        for c in range(1, a.shape[-1]):
+            s = s + a[..., c]
+        return s
+
+    def _sq_last(a):
+        s = a[..., 0] * a[..., 0]
+        for c in range(1, a.shape[-1]):
+            s = s + a[..., c] * a[..., c]
+        return s
+
+    def score(hist, u, mask):
+        cum = jnp.cumsum(hist.astype(dt), axis=2)
+        tot = cum[:, :, -1:, :]
+        R = tot - cum
+        if cls:
+            nL, nR = _sum_last(cum), _sum_last(R)
+            sc = _sq_last(cum) / jnp.maximum(nL, 1e-12) \
+                + _sq_last(R) / jnp.maximum(nR, 1e-12)
+            p0 = tot[:, 0, 0, :]
+            parent = _sq_last(p0) / jnp.maximum(_sum_last(p0), 1e-12)
+            gain = sc - parent[:, None, None]
+            node_tot = p0
+        else:
+            nL, nR = cum[..., 0], R[..., 0]
+            sc = cum[..., 1] ** 2 / jnp.maximum(nL, 1e-12) \
+                + R[..., 1] ** 2 / jnp.maximum(nR, 1e-12)
+            parent = tot[..., 0, 1] ** 2 / jnp.maximum(tot[..., 0, 0], 1e-12)
+            gain = sc - parent[:, :, None]
+            node_tot = tot[:, 0, 0, :]
+
+        valid = (nL >= msl) & (nR >= msl)
+        valid = valid.at[:, :, -1].set(False)
+        gain = jnp.where(valid, gain, -jnp.inf)
+        if random_split:
+            uu = jnp.where(valid, u.astype(dt), -jnp.inf)
+            bins_choice = uu.argmax(axis=2)
+        else:
+            bins_choice = gain.argmax(axis=2)
+        gain = jnp.take_along_axis(
+            gain, bins_choice[:, :, None], axis=2)[:, :, 0]
+        if has_mask:
+            gain = jnp.where(mask, gain, -jnp.inf)
+        f_best = gain.argmax(axis=1)
+        g_best = jnp.take_along_axis(gain, f_best[:, None], axis=1)[:, 0]
+        b_best = jnp.take_along_axis(
+            bins_choice, f_best[:, None], axis=1)[:, 0]
+        return g_best, f_best, b_best, node_tot
+
+    return jax.jit(score)
+
+
 def _partition_numpy(Xb: np.ndarray, rows: np.ndarray, w: np.ndarray,
                      y_inst: np.ndarray, bounds: np.ndarray,
                      split: np.ndarray, best_f: np.ndarray,
@@ -549,17 +662,94 @@ def _grow_trees(Xb: np.ndarray, y: np.ndarray, tasks: Sequence[tuple],
     random_split = params.splitter == "random"
     msl = float(params.min_samples_leaf)
     chunk_nodes = max(1, int(_HIST_BUDGET // max(d * B * C, 1)))
+    # Sibling pairs (children 2p, 2p+1) must never straddle a hist chunk for
+    # the subtraction trick; per-tree node offsets are even from level 2 on,
+    # so an even chunk width is sufficient.  RNG draws are chunk-invariant
+    # (``Generator.random`` fills from a sequential stream), so this does
+    # not perturb drawn values.
+    if chunk_nodes > 1:
+        chunk_nodes -= chunk_nodes % 2
+    sub_on = _HIST_SUBTRACT and chunk_nodes % 2 == 0
 
     native = backend == "native"
+    use_jax = backend == "jax"
+    use_f32 = bool(params.float32_hist) and not use_jax
+    nat = jnp = hops = None
     if native:
         from . import _native as nat
         Xb_k = np.ascontiguousarray(Xb, dtype=np.uint8)
         if d and len(Xb_k) and int(Xb_k.max()) >= B:
             raise ValueError(f"bin codes exceed binner.n_bins={B}")
+    elif use_jax:
+        import jax as _jax
+        import jax.numpy as jnp
+        from ..kernels.histogram import ops as hops
+        Xb_k = Xb
+        Xb_dev = jnp.asarray(np.ascontiguousarray(Xb, dtype=np.int32))
+        dt_name = str(_jax.dtypes.canonicalize_dtype(np.float64))
+        jax_pallas = (_JAX_USE_PALLAS if _JAX_USE_PALLAS is not None
+                      else hops.pallas_supported())
     else:
-        nat = None
         Xb_k = Xb
     yc = y.astype(np.int64) if cls else np.asarray(y, dtype=np.float64)
+
+    if use_jax:
+        def jax_hist(rows_c, loc_c, w_c, y_c, nn):
+            """Device histograms via kernels/histogram/ops for one node
+            range; samples are zero-weight padded to a power of two so the
+            jitted kernels see log-many shapes per fit."""
+            m = len(rows_c)
+            if m == 0:
+                return jnp.zeros((nn, d, B, C), jnp.float32)
+            mp = max(_JAX_TILE, 1 << (m - 1).bit_length())
+            idx = np.zeros(mp, np.int32)
+            idx[:m] = rows_c
+            nod = np.zeros(mp, np.int32)
+            nod[:m] = loc_c
+            xb_dev = Xb_dev[jnp.asarray(idx)]
+            if cls:
+                yv = np.zeros(mp, np.int32)
+                yv[:m] = y_c
+                wv = np.zeros(mp, np.float32)
+                wv[:m] = w_c
+                return hops.histogram(
+                    xb_dev, nod, yv, wv, nn, B, C, tile=_JAX_TILE,
+                    use_pallas=jax_pallas, max_node_chunk=_JAX_NODE_CHUNK,
+                    interpret=_JAX_INTERPRET)
+            wm = np.zeros((mp, 3), np.float32)
+            wm[:m, 0] = w_c
+            wm[:m, 1] = w_c * y_c
+            wm[:m, 2] = w_c * (y_c * y_c)
+            return hops.moments(
+                xb_dev, nod, wm, nn, B, tile=_JAX_TILE,
+                use_pallas=jax_pallas, max_node_chunk=_JAX_NODE_CHUNK,
+                interpret=_JAX_INTERPRET)
+
+        def score_jax(hist_dev, gcc, u_ch, m_ch):
+            """On-device best-split scoring; node count padded to a power of
+            two (zero histograms score -inf and are sliced off)."""
+            gp = 1 << max(0, int(gcc - 1).bit_length())
+            if gp != gcc:
+                hist_dev = jnp.concatenate(
+                    [hist_dev,
+                     jnp.zeros((gp - gcc,) + tuple(hist_dev.shape[1:]),
+                               hist_dev.dtype)], axis=0)
+            u_dev = m_dev = None
+            if u_ch is not None:
+                u_pad = np.zeros((gp, d, B), np.float64)
+                u_pad[:gcc] = u_ch
+                u_dev = jnp.asarray(u_pad)
+            if m_ch is not None:
+                m_pad = np.zeros((gp, d), bool)
+                m_pad[:gcc] = m_ch
+                m_dev = jnp.asarray(m_pad)
+            fn = _jax_scorer(cls, random_split, m_ch is not None, msl,
+                             dt_name)
+            g_b, f_b, b_b, tot = fn(hist_dev, u_dev, m_dev)
+            return (np.asarray(g_b, np.float64)[:gcc],
+                    np.asarray(f_b).astype(np.int64)[:gcc],
+                    np.asarray(b_b).astype(np.int64)[:gcc],
+                    np.asarray(tot, np.float64)[:gcc])
 
     stores: List[_TreeStore] = []
     acts: List[np.ndarray] = []      # per-tree active node ids (store ids)
@@ -572,6 +762,13 @@ def _grow_trees(Xb: np.ndarray, y: np.ndarray, tasks: Sequence[tuple],
         stores.append(st)
         acts.append(np.zeros(1, np.int64))
         rngs.append(rng)
+
+    # Histogram-subtraction state: per live tree, the retained split-node
+    # histograms of the previous level (``ret_hist``, split-rank rows) and
+    # the children's known-leaf flags (``ret_kl``) that gate which sibling
+    # pairs may be derived instead of accumulated.
+    ret_hist: dict = {}
+    ret_kl: dict = {}
 
     # Level-global frontier state: instances of all live trees' active
     # nodes, sorted by (tree, node); the partition step emits the next
@@ -619,6 +816,46 @@ def _grow_trees(Xb: np.ndarray, y: np.ndarray, tasks: Sequence[tuple],
         draw_cache: dict = {}
         tree_for_node = np.repeat(np.arange(len(live)), g_sizes)
 
+        # ---- histogram-subtraction plan for this level ----
+        # ``dm`` marks nodes whose histogram is accumulated directly; a
+        # derived node's histogram is ``ret_hist[parent] - hist[sibling]``.
+        # A pair is derivable only when neither child is known-leaf-flagged
+        # (flags are computed in both prune modes and flagged children
+        # always become leaves, so prune on/off stays conformant); the
+        # computed child is the smaller side (tie -> left).  All decisions
+        # are per-tree or config-derived, so batched == per-tree holds.
+        cnts_lvl = np.diff(bounds_g)
+        dm = der_par = der_sib = None
+        if sub_on and ret_hist:
+            dm = np.ones(G, bool)
+            der_par = np.zeros(G, np.int64)
+            der_sib = np.zeros(G, np.int64)
+            for i, t in enumerate(live):
+                rh = ret_hist.get(t)
+                if rh is None:
+                    continue
+                kl = ret_kl[t]
+                o0i, g = int(node_off[i]), int(g_sizes[i])
+                ns_prev = g // 2
+                pair_ok = ~(kl[0::2] | kl[1::2])
+                lc = cnts_lvl[o0i:o0i + g:2]
+                rc = cnts_lvl[o0i + 1:o0i + g:2]
+                left_small = lc <= rc
+                base2 = 2 * np.arange(ns_prev, dtype=np.int64)
+                der_loc = np.where(left_small, base2 + 1, base2)[pair_ok]
+                sib_loc = np.where(left_small, base2, base2 + 1)[pair_ok]
+                dm[o0i + der_loc] = False
+                der_par[o0i + der_loc] = np.flatnonzero(pair_ok)
+                der_sib[o0i + der_loc] = o0i + sib_loc
+            if dm.all():
+                dm = None
+        stash_set = set()
+        if sub_on:
+            for i in range(len(live)):
+                if g_sizes[i] <= _SUB_MAX_PARENTS:
+                    stash_set.add(i)
+        pend: dict = {}
+
         def draws_for(i: int) -> _LevelDraws:
             if i not in draw_cache:
                 draw_cache[i] = _LevelDraws(
@@ -651,13 +888,104 @@ def _grow_trees(Xb: np.ndarray, y: np.ndarray, tasks: Sequence[tuple],
                 for i in list(draw_cache):
                     if int(node_off[i + 1]) <= c1:
                         del draw_cache[i]
-            if native:
+
+            gcc = c1 - c0
+            i_lo, i_hi = int(tree_for_node[c0]), int(tree_for_node[c1 - 1])
+            has_stash = any(i in stash_set for i in range(i_lo, i_hi + 1))
+            dm_ch = dm[c0:c1] if dm is not None else None
+            all_direct = dm_ch is None or bool(dm_ch.all())
+
+            if native and all_direct and not has_stash and not use_f32:
+                # fast path: fused native level kernel, no histogram ever
+                # materialized (deep/wide levels land here)
                 res = nat.train_level_native(
                     Xb_k, rows_g[s0:s1], w_g[s0:s1], y_g[s0:s1], bch, B, C,
                     cls, msl, u_ch, m_ch)
+                (best_gain[c0:c1], best_f[c0:c1], best_b[c0:c1],
+                 node_tot[c0:c1]) = res
+                continue
+
+            if not all_direct:
+                dn = np.flatnonzero(dm_ch)
+                dl = np.flatnonzero(~dm_ch)
+                d_starts = bounds_g[dn + c0]
+                d_lens = bounds_g[dn + c0 + 1] - d_starts
+                sel = _ranges_concat(d_starts, d_lens)
+                bnd_d = np.concatenate([[0], np.cumsum(d_lens)]) \
+                    .astype(np.int64)
+
+                def parent_rows():
+                    """Stacked retained-parent hist rows aligned with ``dl``
+                    (trees ascend with node index, so per-tree parts
+                    concatenate in ``dl`` order)."""
+                    parts = []
+                    for i in range(i_lo, i_hi + 1):
+                        rh = ret_hist.get(live[i])
+                        if rh is None:
+                            continue
+                        o0i = int(node_off[i])
+                        o1i = int(node_off[i + 1])
+                        g_dl = dl[(dl + c0 >= o0i) & (dl + c0 < o1i)]
+                        if len(g_dl):
+                            parts.append(rh[der_par[g_dl + c0]])
+                    return parts
+
+            if use_jax:
+                if all_direct:
+                    loc = np.repeat(np.arange(gcc, dtype=np.int64),
+                                    np.diff(bch))
+                    hist = jax_hist(rows_g[s0:s1], loc, w_g[s0:s1],
+                                    y_g[s0:s1], gcc)
+                else:
+                    loc = np.repeat(np.arange(len(dn), dtype=np.int64),
+                                    d_lens)
+                    h_dir = jax_hist(rows_g[sel], loc, w_g[sel], y_g[sel],
+                                     len(dn))
+                    hist = jnp.zeros((gcc, d, B, C), jnp.float32) \
+                        .at[jnp.asarray(dn)].set(h_dir)
+                    sib = np.searchsorted(dn, der_sib[dl + c0] - c0)
+                    par = jnp.concatenate(parent_rows(), axis=0)
+                    hist = hist.at[jnp.asarray(dl)].set(
+                        par - h_dir[jnp.asarray(sib)])
             else:
-                hist = _hist_numpy(Xb_k, rows_g[s0:s1], w_g[s0:s1],
-                                   y_g[s0:s1], bch, d, B, C, cls)
+                def hist_fn(r, wv, yv, bd):
+                    if native:
+                        return nat.train_hist_native(Xb_k, r, wv, yv, bd,
+                                                     B, C, cls)
+                    return _hist_numpy(Xb_k, r, wv, yv, bd, d, B, C, cls)
+
+                if all_direct:
+                    hist = hist_fn(rows_g[s0:s1], w_g[s0:s1], y_g[s0:s1],
+                                   bch)
+                else:
+                    h_dir = hist_fn(np.ascontiguousarray(rows_g[sel]),
+                                    np.ascontiguousarray(w_g[sel]),
+                                    np.ascontiguousarray(y_g[sel]), bnd_d)
+                    hist = np.empty((gcc, d, B, C), np.float64)
+                    hist[dn] = h_dir
+                    par = np.concatenate(parent_rows(), axis=0)
+                    hist[dl] = par - hist[der_sib[dl + c0] - c0]
+
+            if has_stash:
+                for i in range(i_lo, i_hi + 1):
+                    if i not in stash_set:
+                        continue
+                    o0i, o1i = int(node_off[i]), int(node_off[i + 1])
+                    lo, hi = max(o0i, c0), min(o1i, c1)
+                    if lo < hi:
+                        sl = hist[lo - c0:hi - c0]
+                        pend.setdefault(live[i], []).append(
+                            sl if use_jax else sl.copy())
+
+            if use_jax:
+                res = score_jax(hist, gcc, u_ch, m_ch)
+            elif use_f32:
+                res = _best_splits(hist.astype(np.float32), msl, cls,
+                                   random_split, u_ch, m_ch)
+            elif native:
+                res = nat.train_best_split_native(hist, msl, cls, u_ch,
+                                                  m_ch)
+            else:
                 res = _best_splits(hist, msl, cls, random_split, u_ch, m_ch)
             (best_gain[c0:c1], best_f[c0:c1], best_b[c0:c1],
              node_tot[c0:c1]) = res
@@ -718,6 +1046,8 @@ def _grow_trees(Xb: np.ndarray, y: np.ndarray, tasks: Sequence[tuple],
                 child_counts = np.where(known_leaf, 0, child_counts)
 
         new_live = []
+        new_ret_h: dict = {}
+        new_ret_kl: dict = {}
         for i, t in enumerate(live):
             o0, o1 = int(node_off[i]), int(node_off[i + 1])
             st = stores[t]
@@ -727,6 +1057,7 @@ def _grow_trees(Xb: np.ndarray, y: np.ndarray, tasks: Sequence[tuple],
                 # every active node became a leaf; unresolved feat (-2)
                 # entries are converted at assembly
                 acts[t] = np.empty(0, np.int64)
+                pend.pop(t, None)
                 continue
             a_s = acts[t][sp]
             f_s = best_f[o0:o1][sp]
@@ -742,9 +1073,20 @@ def _grow_trees(Xb: np.ndarray, y: np.ndarray, tasks: Sequence[tuple],
             st.val[base:base + 2 * ns] = \
                 cvals[2 * s_lo:2 * s_hi].astype(np.float32)
             st.cnt[base:base + 2 * ns] = ccnt[2 * s_lo:2 * s_hi]
+            parts = pend.pop(t, None)
+            if parts is not None:
+                # retain this level's split-node histograms (split-rank
+                # rows) + the children's known-leaf flags for next level's
+                # sibling subtraction
+                full_h = parts[0] if len(parts) == 1 else (
+                    jnp.concatenate(parts, axis=0) if use_jax
+                    else np.concatenate(parts, axis=0))
+                new_ret_h[t] = full_h[np.flatnonzero(sp)]
+                new_ret_kl[t] = known_leaf[2 * s_lo:2 * s_hi].copy()
             acts[t] = cid
             new_live.append(t)
         live = new_live
+        ret_hist, ret_kl = new_ret_h, new_ret_kl
         if n_split_g:
             # partition output IS the next level's global frontier layout
             rows_g, w_g = rows_nx, w_nx

@@ -1,6 +1,6 @@
-"""Pallas TPU kernel: split histograms via one-hot MXU matmuls.
+"""Pallas TPU kernels: split histograms via one-hot MXU matmuls.
 
-TPU adaptation of the CPU `np.add.at` histogram (DESIGN.md §3): random
+TPU adaptation of the CPU ``np.add.at`` histogram (DESIGN.md §3): random
 scatter is replaced by a dense contraction
 
     H[(node,class), (feature,bin)] = Σ_i  A[i,(node,class)] · B[i,(feature,bin)]
@@ -11,9 +11,19 @@ D·bins) matmul — exactly MXU shape.  The grid walks sample tiles and
 accumulates into the same output block (sequential TPU grid ⇒ safe
 read-modify-write).
 
-VMEM: tile·(nodes·C + D·bins)·4 bytes for the two one-hots plus the
-(nodes·C, D·bins) accumulator; block sizes must keep this under budget —
-the `ops.py` wrapper chunks nodes when needed.
+Two kernel variants share that structure:
+
+  ``histogram_pallas``  per-(node, class) weight sums — classification,
+  ``moments_pallas``    per-node (Σw, Σwy, Σwy²)-style payload sums —
+                        regression / gradient boosting; the payload matrix
+                        ``wm`` carries one column per accumulated moment.
+
+VMEM: the whole (nodes·C, D·bins) accumulator block is resident alongside
+the two one-hots — ``tile·(nodes·C + D·bins)·4`` bytes for the one-hots
+plus ``nodes·C·D·bins·4`` for the accumulator.  Both entry points *enforce*
+that budget (``vmem_budget``) and raise instead of silently emitting a
+block that cannot fit; the ``ops.py`` wrapper chunks nodes AND features so
+callers never have to think about it.
 """
 from __future__ import annotations
 
@@ -23,7 +33,51 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["histogram_pallas"]
+__all__ = ["histogram_pallas", "moments_pallas", "hist_vmem_bytes",
+           "DEFAULT_VMEM_BUDGET"]
+
+# Per-core VMEM we allow one histogram call to occupy.  Real TPUs have
+# ~16 MiB/core; keep headroom for double buffering of the input tiles.
+DEFAULT_VMEM_BUDGET = 12 << 20
+
+
+def hist_vmem_bytes(tile: int, d: int, n_nodes: int, n_bins: int,
+                    n_channels: int) -> int:
+    """Estimated VMEM residency of one kernel invocation, in bytes.
+
+    Counts the (nodes·C, d·bins) f32 accumulator, the A one-hot twice (the
+    weighted build materializes a (tile, nodes, C) transient before the
+    reshape), the B one-hot, and the int32/f32 input tiles.
+    """
+    acc = n_nodes * n_channels * d * n_bins
+    a = tile * n_nodes * n_channels
+    b = tile * d * n_bins
+    inputs = tile * d + 4 * tile
+    return 4 * (acc + 2 * a + b + inputs)
+
+
+def _check_vmem(tile: int, d: int, n_nodes: int, n_bins: int,
+                n_channels: int, vmem_budget: int) -> None:
+    need = hist_vmem_bytes(tile, d, n_nodes, n_bins, n_channels)
+    if need > vmem_budget:
+        raise ValueError(
+            f"histogram kernel block needs ~{need / 2**20:.1f} MiB VMEM "
+            f"(tile={tile}, d={d}, nodes={n_nodes}, bins={n_bins}, "
+            f"channels={n_channels}) > budget {vmem_budget / 2**20:.1f} MiB; "
+            "chunk nodes and/or features via kernels.histogram.ops.histogram "
+            "(it sizes blocks to fit), or raise vmem_budget explicitly")
+
+
+def _pad_samples(tile, xb, node, w_cols):
+    n = xb.shape[0]
+    n_pad = (n + tile - 1) // tile * tile
+    if n_pad != n:
+        pad = n_pad - n
+        xb = jnp.pad(xb, ((0, pad), (0, 0)))
+        node = jnp.pad(node, (0, pad))
+        w_cols = [jnp.pad(c, ((0, pad),) + ((0, 0),) * (c.ndim - 1))
+                  for c in w_cols]       # zero weight -> no contribution
+    return n_pad, xb, node, w_cols
 
 
 def _hist_kernel(xb_ref, node_ref, y_ref, w_ref, out_ref, *,
@@ -52,19 +106,15 @@ def _hist_kernel(xb_ref, node_ref, y_ref, w_ref, out_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "n_nodes", "n_bins", "n_classes", "tile", "interpret"))
+    "n_nodes", "n_bins", "n_classes", "tile", "interpret", "vmem_budget"))
 def histogram_pallas(xb: jax.Array, node: jax.Array, y: jax.Array,
                      w: jax.Array, n_nodes: int, n_bins: int, n_classes: int,
-                     tile: int = 512, interpret: bool = False) -> jax.Array:
-    """Returns (n_nodes, D, n_bins, n_classes) float32 histograms."""
+                     tile: int = 512, interpret: bool = False,
+                     vmem_budget: int = DEFAULT_VMEM_BUDGET) -> jax.Array:
+    """Returns (n_nodes, D, n_bins, n_classes) float32 class histograms."""
     n, d = xb.shape
-    n_pad = (n + tile - 1) // tile * tile
-    if n_pad != n:
-        pad = n_pad - n
-        xb = jnp.pad(xb, ((0, pad), (0, 0)))
-        node = jnp.pad(node, (0, pad))
-        y = jnp.pad(y, (0, pad))
-        w = jnp.pad(w, (0, pad))          # zero weight -> no contribution
+    _check_vmem(tile, d, n_nodes, n_bins, n_classes, vmem_budget)
+    n_pad, xb, node, (y, w) = _pad_samples(tile, xb, node, [y, w])
 
     out = pl.pallas_call(
         functools.partial(_hist_kernel, n_nodes=n_nodes, n_bins=n_bins,
@@ -84,3 +134,62 @@ def histogram_pallas(xb: jax.Array, node: jax.Array, y: jax.Array,
     )(xb.astype(jnp.int32), node.astype(jnp.int32)[:, None],
       y.astype(jnp.int32)[:, None], w.astype(jnp.float32)[:, None])
     return out.reshape(n_nodes, n_classes, d, n_bins).transpose(0, 2, 3, 1)
+
+
+def _moments_kernel(xb_ref, node_ref, wm_ref, out_ref, *,
+                    n_nodes: int, n_bins: int, n_mom: int):
+    i = pl.program_id(0)
+
+    xb = xb_ref[...]            # (tile, D)
+    node = node_ref[...]        # (tile, 1)
+    wm = wm_ref[...]            # (tile, K) payload columns
+    tile, d = xb.shape
+
+    A = (node[:, 0][:, None] == jnp.arange(n_nodes)[None, :])
+    A = A.astype(jnp.float32)                                   # (tile, nodes)
+    A = (A[:, :, None] * wm[:, None, :]).reshape(tile, n_nodes * n_mom)
+    B = (xb[:, :, None] == jnp.arange(n_bins)[None, None, :])
+    B = B.astype(jnp.float32).reshape(tile, d * n_bins)
+
+    partial = jnp.dot(A.T, B, preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_nodes", "n_bins", "n_mom", "tile", "interpret", "vmem_budget"))
+def moments_pallas(xb: jax.Array, node: jax.Array, wm: jax.Array,
+                   n_nodes: int, n_bins: int, n_mom: int,
+                   tile: int = 512, interpret: bool = False,
+                   vmem_budget: int = DEFAULT_VMEM_BUDGET) -> jax.Array:
+    """Returns (n_nodes, D, n_bins, n_mom) float32 payload-sum histograms.
+
+    ``wm`` is (N, n_mom): one column per accumulated moment — the trainer
+    passes (w, w·y, w·y²) so regression/GBT split scoring gets its
+    (Σw, Σwy, Σwy²) channels from the same MXU contraction.
+    """
+    n, d = xb.shape
+    _check_vmem(tile, d, n_nodes, n_bins, n_mom, vmem_budget)
+    n_pad, xb, node, (wm,) = _pad_samples(tile, xb, node, [wm])
+
+    out = pl.pallas_call(
+        functools.partial(_moments_kernel, n_nodes=n_nodes, n_bins=n_bins,
+                          n_mom=n_mom),
+        grid=(n_pad // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile, n_mom), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_nodes * n_mom, d * n_bins),
+                               lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_nodes * n_mom, d * n_bins),
+                                       jnp.float32),
+        interpret=interpret,
+    )(xb.astype(jnp.int32), node.astype(jnp.int32)[:, None],
+      wm.astype(jnp.float32))
+    return out.reshape(n_nodes, n_mom, d, n_bins).transpose(0, 2, 3, 1)

@@ -1,36 +1,201 @@
-"""Jit'd wrapper for histogram building (chunks nodes to bound VMEM)."""
+"""Host-side wrapper for the histogram kernel family.
+
+Responsibilities (all fixed here so the kernels stay simple):
+
+  * **Interpret gating.** Compiled pallas lowering is probed once per jax
+    backend (a tiny kernel is actually lowered+run, not guessed from the
+    platform name), so GPUs get the compiled Triton path instead of being
+    silently forced onto the interpreter; callers can override with
+    ``interpret=``.  The resolved choice is logged once.
+  * **Node chunking with pre-partitioned sample ranges.** Above
+    ``max_node_chunk`` the samples are stably sorted by node once and each
+    chunk's kernel call sees ONLY its own sample range — the old path
+    rescanned (and zero-weighted) all N samples per chunk.
+  * **Feature chunking.** The kernel emits one resident
+    ``(nodes·C, d·bins)`` accumulator block; wide ``d·bins`` is split into
+    feature blocks sized so the whole invocation fits ``vmem_budget``
+    (the kernels assert the same budget — nothing can slip through).
+"""
 from __future__ import annotations
+
+import logging
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .histogram import histogram_pallas
-from .ref import histogram_ref
+from .histogram import (DEFAULT_VMEM_BUDGET, hist_vmem_bytes,
+                        histogram_pallas, moments_pallas)
+from .ref import histogram_ref, moments_ref
 
-__all__ = ["histogram"]
+__all__ = ["histogram", "moments", "pallas_supported", "resolve_interpret"]
+
+_log = logging.getLogger(__name__)
+_SUPPORTED: dict = {}
+_LOGGED = False
+
+
+def pallas_supported(backend: Optional[str] = None) -> bool:
+    """True iff compiled (non-interpret) pallas lowering works on ``backend``.
+
+    Probed by lowering+running a tiny kernel once per backend and cached —
+    the platform name alone is not trusted (e.g. CPU rejects compiled mode,
+    and a GPU build without Triton support would too).
+    """
+    backend = backend or jax.default_backend()
+    if backend not in _SUPPORTED:
+        try:
+            from jax.experimental import pallas as pl
+
+            def _probe(x_ref, o_ref):
+                o_ref[...] = x_ref[...] + 1.0
+
+            out = pl.pallas_call(
+                _probe,
+                out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+                interpret=False,
+            )(jnp.zeros((8, 128), jnp.float32))
+            jax.block_until_ready(out)
+            _SUPPORTED[backend] = True
+        except Exception:   # lowering/compile not available -> interpret
+            _SUPPORTED[backend] = False
+    return _SUPPORTED[backend]
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve the interpret flag: caller override wins, else probe."""
+    global _LOGGED
+    if interpret is None:
+        interpret = not pallas_supported()
+    interpret = bool(interpret)
+    if not _LOGGED:
+        _log.info("pallas histogram kernels: %s mode on %r backend",
+                  "interpret" if interpret else "compiled",
+                  jax.default_backend())
+        _LOGGED = True
+    return interpret
+
+
+def _feature_blocks(d: int, tile: int, n_nodes: int, n_bins: int,
+                    n_channels: int, vmem_budget: int) -> int:
+    """Largest feature-block width whose kernel call fits ``vmem_budget``."""
+    db = d
+    while db > 1 and hist_vmem_bytes(tile, db, n_nodes, n_bins,
+                                     n_channels) > vmem_budget:
+        db = (db + 1) // 2
+    return max(1, db)
+
+
+def _node_chunks(node: np.ndarray, n_nodes: int, max_node_chunk: int):
+    """Stable-sort samples by node once; yield (c0, c1, i0, i1) chunk spans.
+
+    Returns (order, spans): ``order`` re-sorts every per-sample array so
+    chunk ``[c0, c1)`` owns exactly the sample range ``order[i0:i1]`` — each
+    chunk's kernel call scans only its own samples instead of all N.
+    """
+    order = np.argsort(node, kind="stable")
+    node_sorted = node[order]
+    starts = np.arange(0, n_nodes, max_node_chunk)
+    ends = np.minimum(starts + max_node_chunk, n_nodes)
+    i0 = np.searchsorted(node_sorted, starts, side="left")
+    i1 = np.searchsorted(node_sorted, ends, side="left")
+    return order, list(zip(starts.tolist(), ends.tolist(),
+                           i0.tolist(), i1.tolist()))
+
+
+def _dispatch(call_one, nd_shape, node, n_nodes: int,
+              max_node_chunk: int):
+    """Shared node-chunking driver: ``call_one(sel, base, nc)`` computes the
+    histogram of ``nc`` node slots for the (host-index) sample selection
+    ``sel`` with node ids rebased by ``base``."""
+    if n_nodes <= max_node_chunk:
+        return call_one(None, 0, n_nodes)
+    order, spans = _node_chunks(node, n_nodes, max_node_chunk)
+    outs = []
+    for c0, c1, i0, i1 in spans:
+        outs.append(call_one(order[i0:i1], c0, c1 - c0))
+    return jnp.concatenate(outs, axis=0)
 
 
 def histogram(xb, node, y, w, n_nodes: int, n_bins: int, n_classes: int,
               tile: int = 512, use_pallas: bool = True,
-              max_node_chunk: int = 64) -> jax.Array:
-    """(n_nodes, D, n_bins, C) float32, chunking nodes for VMEM."""
+              max_node_chunk: int = 64, interpret: Optional[bool] = None,
+              vmem_budget: int = DEFAULT_VMEM_BUDGET) -> jax.Array:
+    """(n_nodes, D, n_bins, C) float32 class histograms, chunked to fit VMEM."""
     xb = jnp.asarray(xb, jnp.int32)
     node = jnp.asarray(node, jnp.int32)
     y = jnp.asarray(y, jnp.int32)
     w = jnp.asarray(w, jnp.float32)
+    n, d = xb.shape
     if not use_pallas:
         return histogram_ref(xb, node, y, w, n_nodes, n_bins, n_classes)
-    interp = jax.default_backend() != "tpu"
-    if n_nodes <= max_node_chunk:
-        return histogram_pallas(xb, node, y, w, n_nodes, n_bins, n_classes,
-                                tile=tile, interpret=interp)
-    outs = []
-    for c0 in range(0, n_nodes, max_node_chunk):
-        c1 = min(c0 + max_node_chunk, n_nodes)
-        sel = (node >= c0) & (node < c1)
-        outs.append(histogram_pallas(
-            xb, jnp.where(sel, node - c0, 0), y,
-            jnp.where(sel, w, 0.0), c1 - c0, n_bins, n_classes,
-            tile=tile, interpret=interp))
-    return jnp.concatenate(outs, axis=0)
+    interp = resolve_interpret(interpret)
+    if n == 0:
+        return jnp.zeros((n_nodes, d, n_bins, n_classes), jnp.float32)
+
+    node_np = np.asarray(node)
+
+    def call_one(sel, base, nc):
+        xb_c, node_c, y_c, w_c = xb, node, y, w
+        if sel is not None:
+            if len(sel) == 0:
+                return jnp.zeros((nc, d, n_bins, n_classes), jnp.float32)
+            idx = jnp.asarray(sel)
+            xb_c, node_c = xb[idx], node[idx] - base
+            y_c, w_c = y[idx], w[idx]
+        db = _feature_blocks(d, tile, nc, n_bins, n_classes, vmem_budget)
+        if db >= d:
+            return histogram_pallas(xb_c, node_c, y_c, w_c, nc, n_bins,
+                                    n_classes, tile=tile, interpret=interp,
+                                    vmem_budget=vmem_budget)
+        parts = [histogram_pallas(xb_c[:, f0:min(f0 + db, d)], node_c, y_c,
+                                  w_c, nc, n_bins, n_classes, tile=tile,
+                                  interpret=interp, vmem_budget=vmem_budget)
+                 for f0 in range(0, d, db)]
+        return jnp.concatenate(parts, axis=1)
+
+    return _dispatch(call_one, None, node_np, n_nodes, max_node_chunk)
+
+
+def moments(xb, node, wm, n_nodes: int, n_bins: int,
+            tile: int = 512, use_pallas: bool = True,
+            max_node_chunk: int = 64, interpret: Optional[bool] = None,
+            vmem_budget: int = DEFAULT_VMEM_BUDGET) -> jax.Array:
+    """(n_nodes, D, n_bins, K) float32 payload-sum histograms.
+
+    ``wm`` is (N, K) payload columns — the trainer passes (w, w·y, w·y²)
+    so regression split scoring gets its moment channels on-device.
+    """
+    xb = jnp.asarray(xb, jnp.int32)
+    node = jnp.asarray(node, jnp.int32)
+    wm = jnp.asarray(wm, jnp.float32)
+    n, d = xb.shape
+    n_mom = wm.shape[1]
+    if not use_pallas:
+        return moments_ref(xb, node, wm, n_nodes, n_bins, n_mom)
+    interp = resolve_interpret(interpret)
+    if n == 0:
+        return jnp.zeros((n_nodes, d, n_bins, n_mom), jnp.float32)
+
+    node_np = np.asarray(node)
+
+    def call_one(sel, base, nc):
+        xb_c, node_c, wm_c = xb, node, wm
+        if sel is not None:
+            if len(sel) == 0:
+                return jnp.zeros((nc, d, n_bins, n_mom), jnp.float32)
+            idx = jnp.asarray(sel)
+            xb_c, node_c, wm_c = xb[idx], node[idx] - base, wm[idx]
+        db = _feature_blocks(d, tile, nc, n_bins, n_mom, vmem_budget)
+        if db >= d:
+            return moments_pallas(xb_c, node_c, wm_c, nc, n_bins, n_mom,
+                                  tile=tile, interpret=interp,
+                                  vmem_budget=vmem_budget)
+        parts = [moments_pallas(xb_c[:, f0:min(f0 + db, d)], node_c, wm_c,
+                                nc, n_bins, n_mom, tile=tile,
+                                interpret=interp, vmem_budget=vmem_budget)
+                 for f0 in range(0, d, db)]
+        return jnp.concatenate(parts, axis=1)
+
+    return _dispatch(call_one, None, node_np, n_nodes, max_node_chunk)

@@ -1,12 +1,22 @@
-"""Pure-jnp oracle for split histograms (scatter-add formulation)."""
+"""Pure-jnp oracles for split histograms (scatter-add formulation).
+
+Both oracles scatter into a flat bin table with ``.at[].add`` over a lazy
+``(N, D)`` broadcast of the weights — under jit the broadcast fuses into
+the scatter, so no ``O(N·D)`` weight transient is ever materialized (the
+``jnp.repeat(w, d)`` these replaced was exactly the blow-up PR 5 excised
+from the numpy trainer).
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["histogram_ref"]
+__all__ = ["histogram_ref", "moments_ref"]
 
 
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "n_classes"))
 def histogram_ref(xb: jax.Array, node: jax.Array, y: jax.Array, w: jax.Array,
                   n_nodes: int, n_bins: int, n_classes: int) -> jax.Array:
     """Weighted class histograms per (node, feature, bin).
@@ -21,5 +31,24 @@ def histogram_ref(xb: jax.Array, node: jax.Array, y: jax.Array, w: jax.Array,
     flat = ((node[:, None] * d + jnp.arange(d)[None, :]) * n_bins + xb) \
         * n_classes + y[:, None]
     size = n_nodes * d * n_bins * n_classes
-    hist = jax.ops.segment_sum(jnp.repeat(w, d), flat.ravel(), num_segments=size)
+    hist = jnp.zeros(size, jnp.float32).at[flat].add(
+        jnp.broadcast_to(w.astype(jnp.float32)[:, None], (n, d)))
     return hist.reshape(n_nodes, d, n_bins, n_classes)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "n_mom"))
+def moments_ref(xb: jax.Array, node: jax.Array, wm: jax.Array,
+                n_nodes: int, n_bins: int, n_mom: int) -> jax.Array:
+    """Payload-sum histograms per (node, feature, bin, moment).
+
+    xb:   (N, D) int32 bin codes
+    node: (N,)  int32 node slot in [0, n_nodes)
+    wm:   (N, n_mom) float32 payload columns (e.g. w, w·y, w·y²)
+    returns (n_nodes, D, n_bins, n_mom) float32
+    """
+    n, d = xb.shape
+    flat = (node[:, None] * d + jnp.arange(d)[None, :]) * n_bins + xb
+    size = n_nodes * d * n_bins
+    hist = jnp.zeros((size, n_mom), jnp.float32).at[flat].add(
+        jnp.broadcast_to(wm.astype(jnp.float32)[:, None, :], (n, d, n_mom)))
+    return hist.reshape(n_nodes, d, n_bins, n_mom)

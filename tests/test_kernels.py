@@ -147,3 +147,161 @@ def test_histogram_matches_trainer_bincount():
                        minlength=3 * d * bins * C).reshape(3, d, bins, C)
     got = np.asarray(histogram(xb, node, y, w, 3, bins, C))
     np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+# ------------------------------------------------- histogram wrapper bugfixes
+from repro.kernels.histogram import ops as hist_ops
+from repro.kernels.histogram.histogram import (DEFAULT_VMEM_BUDGET,
+                                               hist_vmem_bytes,
+                                               histogram_pallas)
+from repro.kernels.histogram.ops import moments
+from repro.kernels.histogram.ref import moments_ref
+
+
+def _int_fixture(n, d, nodes, bins, C, seed=0):
+    """Integer-weight fixture: float32 accumulation is exact, so chunked
+    vs unchunked comparisons can demand bit-equality."""
+    rng = np.random.default_rng(seed)
+    xb = rng.integers(0, bins, (n, d)).astype(np.int32)
+    node = rng.integers(0, nodes, n).astype(np.int32)
+    y = rng.integers(0, C, n).astype(np.int32)
+    w = rng.integers(0, 4, n).astype(np.float32)
+    return xb, node, y, w
+
+
+@pytest.mark.parametrize("nodes,max_chunk", [
+    (65, 64),    # the one-past-boundary case: a 64-node chunk + a 1-node tail
+    (64, 64),    # exactly one chunk (no chunking)
+    (130, 64),   # 3 chunks, ragged tail
+    (100, 17),   # ragged everywhere
+])
+def test_histogram_node_chunking_equals_unchunked(nodes, max_chunk):
+    xb, node, y, w = _int_fixture(700, 5, nodes, 16, 3, seed=nodes)
+    chunked = np.asarray(histogram(xb, node, y, w, nodes, 16, 3, tile=256,
+                                   max_node_chunk=max_chunk))
+    whole = np.asarray(histogram(xb, node, y, w, nodes, 16, 3, tile=256,
+                                 max_node_chunk=nodes + 1))
+    np.testing.assert_array_equal(chunked, whole)
+
+
+def test_node_chunking_scans_each_sample_once(monkeypatch):
+    """The chunked path must pre-partition samples: total samples fed to
+    the kernel across chunks equals N (+ tile padding), not N x chunks."""
+    xb, node, y, w = _int_fixture(1000, 4, 130, 8, 3, seed=11)
+    seen = []
+    orig = hist_ops.histogram_pallas
+
+    def spy(xb_c, *a, **k):
+        seen.append(int(xb_c.shape[0]))
+        return orig(xb_c, *a, **k)
+
+    monkeypatch.setattr(hist_ops, "histogram_pallas", spy)
+    hist_ops.histogram(xb, node, y, w, 130, 8, 3, tile=256, max_node_chunk=64)
+    assert len(seen) == 3                       # ceil(130 / 64) chunks
+    # each chunk is tile-padded, so the bound is N + chunks * (tile - 1)
+    assert sum(seen) <= 1000 + 3 * 255, seen
+
+
+def test_histogram_feature_chunking_small_budget():
+    """A vmem budget too small for all features at once still gives the
+    full-width answer (feature axis is chunked and re-concatenated)."""
+    xb, node, y, w = _int_fixture(500, 11, 10, 16, 3, seed=4)
+    budget = hist_vmem_bytes(256, 3, 10, 16, 3) + 1
+    got = np.asarray(histogram(xb, node, y, w, 10, 16, 3, tile=256,
+                               vmem_budget=budget))
+    whole = np.asarray(histogram(xb, node, y, w, 10, 16, 3, tile=256))
+    np.testing.assert_array_equal(got, whole)
+
+
+def test_histogram_pallas_vmem_guard():
+    """The kernel itself refuses blocks that exceed the VMEM budget."""
+    xb, node, y, w = _int_fixture(600, 8, 4096, 256, 10, seed=5)
+    with pytest.raises(ValueError, match="VMEM"):
+        histogram_pallas(jnp.asarray(xb), jnp.asarray(node), jnp.asarray(y),
+                         jnp.asarray(w), 4096, 256, 10, tile=512,
+                         interpret=True)
+    # the ops wrapper sizes blocks to fit the same budget and succeeds
+    out = histogram(xb, node, y, w, 4096, 256, 10, tile=512)
+    assert out.shape == (4096, 8, 256, 10)
+
+
+def test_histogram_empty_input_is_zero():
+    """Zero samples must give a zero histogram (the raw pallas_call with a
+    zero-length grid never runs its init step)."""
+    h = np.asarray(histogram(np.zeros((0, 3), np.int32),
+                             np.zeros(0, np.int32), np.zeros(0, np.int32),
+                             np.zeros(0, np.float32), 5, 8, 2))
+    assert h.shape == (5, 3, 8, 2) and not h.any()
+
+
+def test_interpret_resolution_probes_lowering(monkeypatch):
+    """interpret=None must gate on actual compiled-lowering support (CPU:
+    unsupported -> interpret), and an explicit caller override must win."""
+    assert hist_ops.pallas_supported("cpu") is False
+    assert hist_ops.resolve_interpret(None) is True
+    assert hist_ops.resolve_interpret(False) is False
+    assert hist_ops.resolve_interpret(True) is True
+    monkeypatch.setitem(hist_ops._SUPPORTED, "cpu", True)
+    assert hist_ops.resolve_interpret(None) is False
+
+
+# ----------------------------------------------------------------- moments
+def test_moments_matches_ref():
+    rng = np.random.default_rng(7)
+    n, d, nodes, bins, K = 800, 6, 9, 16, 3
+    xb = rng.integers(0, bins, (n, d)).astype(np.int32)
+    node = rng.integers(0, nodes, n).astype(np.int32)
+    wm = rng.random((n, K)).astype(np.float32)
+    got = np.asarray(moments(xb, node, wm, nodes, bins, tile=256))
+    want = np.asarray(moments_ref(jnp.asarray(xb), jnp.asarray(node),
+                                  jnp.asarray(wm), nodes, bins, K))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_moments_node_chunking_boundary():
+    rng = np.random.default_rng(8)
+    n, d, nodes, bins = 600, 4, 65, 8
+    xb = rng.integers(0, bins, (n, d)).astype(np.int32)
+    node = rng.integers(0, nodes, n).astype(np.int32)
+    wm = rng.integers(0, 4, (n, 3)).astype(np.float32)
+    chunked = np.asarray(moments(xb, node, wm, nodes, bins, tile=256,
+                                 max_node_chunk=64))
+    whole = np.asarray(moments(xb, node, wm, nodes, bins, tile=256,
+                               max_node_chunk=nodes + 1))
+    np.testing.assert_array_equal(chunked, whole)
+
+
+# ----------------------------------- kernel vs trainer production oracle
+def test_histogram_matches_trainer_hist_numpy_weighted():
+    """Weighted class histograms vs training.py::_hist_numpy — the pallas
+    path checked against the production oracle, not just histogram_ref."""
+    from repro.forest.training import _hist_numpy
+    rng = np.random.default_rng(9)
+    n, d, nodes, bins, C = 900, 6, 7, 16, 4
+    xb = rng.integers(0, bins, (n, d)).astype(np.int32)
+    node = np.sort(rng.integers(0, nodes, n)).astype(np.int32)
+    y = rng.integers(0, C, n).astype(np.int32)
+    w = rng.random(n)
+    bounds = np.searchsorted(node, np.arange(nodes + 1)).astype(np.int64)
+    want = _hist_numpy(xb.astype(np.uint8), np.arange(n, dtype=np.int64),
+                       w, y.astype(np.int64), bounds, d, bins, C, True)
+    got = np.asarray(histogram(xb, node, y, w.astype(np.float32),
+                               nodes, bins, C, tile=256))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_moments_match_trainer_hist_numpy_regression():
+    """(Σw, Σwy, Σwy²) moments vs the trainer's regression histogram."""
+    from repro.forest.training import _hist_numpy
+    rng = np.random.default_rng(10)
+    n, d, nodes, bins = 700, 5, 6, 16
+    xb = rng.integers(0, bins, (n, d)).astype(np.int32)
+    node = np.sort(rng.integers(0, nodes, n)).astype(np.int32)
+    yr = rng.random(n)
+    w = rng.integers(1, 4, n).astype(np.float64)
+    bounds = np.searchsorted(node, np.arange(nodes + 1)).astype(np.int64)
+    want = _hist_numpy(xb.astype(np.uint8), np.arange(n, dtype=np.int64),
+                       w, yr, bounds, d, bins, 3, False)
+    wm = np.stack([w, w * yr, w * yr * yr], axis=1).astype(np.float32)
+    got = np.asarray(moments(xb, node, wm, nodes, bins, tile=256))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)

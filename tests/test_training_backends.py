@@ -383,16 +383,190 @@ def test_early_pruning_reduces_frontier_work(backend, monkeypatch):
 
             monkeypatch.setattr(tr, "_hist_numpy", spy_hist)
         else:
+            # the native trainer splits between the fused level kernel
+            # (deep levels) and the two-phase hist kernel (shallow levels
+            # that stash/subtract histograms) — spy both entry points
             from repro.forest import _native as nat
             orig_level = nat.train_level_native
+            orig_hist = nat.train_hist_native
 
             def spy_level(Xb, rows, *a, **k):
                 seen.append(len(rows))
                 return orig_level(Xb, rows, *a, **k)
 
+            def spy_nat_hist(Xb, rows, *a, **k):
+                seen.append(len(rows))
+                return orig_hist(Xb, rows, *a, **k)
+
             monkeypatch.setattr(nat, "train_level_native", spy_level)
+            monkeypatch.setattr(nat, "train_hist_native", spy_nat_hist)
         X, y = data
         RandomForest(n_trees=4, seed=3, tree_backend=backend).fit(X, y)
         totals[prune] = sum(seen)
         monkeypatch.undo()
     assert totals[True] < totals[False], totals
+
+
+# ------------------------------------------------------------- jax backend
+jax = pytest.importorskip("jax")
+
+
+@pytest.fixture
+def jax_x64():
+    """Enable x64 so on-device split scoring runs in float64: on
+    exact-representable integer-weight fixtures the jax backend must then
+    grow trees bit-identical to the CPU backends."""
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+def _int_regression(n=700, d=8, seed=5):
+    """Regression fixture with integer targets: (Σw, Σwy, Σwy²) moments are
+    exactly representable in float32, so jax == numpy holds bitwise."""
+    rng = np.random.default_rng(seed)
+    X = rng.random((n, d))
+    y = np.floor(X[:, 0] * 5 + X[:, 1] * 3).astype(np.float64)
+    return X, y
+
+
+@pytest.mark.parametrize("model,task", [
+    (RandomForest, "classification"),
+    (ExtraTrees, "classification"),
+    (RandomForest, "regression"),
+    (ExtraTrees, "regression"),
+])
+def test_jax_backend_identical_trees(model, task, jax_x64):
+    if task == "classification":
+        X, y = gaussian_classes(900, d=10, n_classes=3, seed=3)
+    else:
+        X, y = _int_regression(seed=3)
+    f_np = model(n_trees=5, seed=0, task=task, tree_backend="numpy").fit(X, y)
+    f_jx = model(n_trees=5, seed=0, task=task, tree_backend="jax").fit(X, y)
+    assert_trees_identical(f_np.trees_, f_jx.trees_,
+                           f"jax/{model.__name__}/{task}")
+
+
+def test_jax_batched_equals_per_tree(jax_x64):
+    X, y = gaussian_classes(700, d=8, n_classes=3, seed=6)
+    rng = np.random.default_rng(0)
+    binner = Binner(X, 64, rng)
+    Xb = binner.transform(X)
+    inbag = bootstrap_counts(len(X), 4, rng)
+    params = TreeParams(task="classification", n_classes=3)
+
+    def grow(backend, block):
+        rngs = np.random.default_rng(7).spawn(4)
+        return fit_forest_binned(Xb, y, inbag, params, rngs, binner,
+                                 backend=backend, tree_block=block)
+
+    ref = grow("numpy", 1)
+    for block in (1, 0, -1):
+        assert_trees_identical(ref, grow("jax", block), f"jax/block={block}")
+
+
+def test_jax_gbt_agreement(jax_x64):
+    """GBT stages carry continuous residuals, so conformance is
+    agreement-bounded: per-sample predictions must track the numpy run."""
+    X, y = _int_regression(seed=9)
+    g_np = GradientBoostedTrees(n_trees=8, seed=0, task="regression",
+                                tree_backend="numpy").fit(X, y)
+    g_jx = GradientBoostedTrees(n_trees=8, seed=0, task="regression",
+                                tree_backend="jax").fit(X, y)
+    pn, pj = g_np.predict(X), g_jx.predict(X)
+    assert np.abs(pn - pj).max() <= 0.05 * y.std() + 1e-9
+
+
+def test_jax_continuous_regression_agreement(jax_x64):
+    """Continuous targets: float32 histogram accumulation may flip
+    near-tied splits, so assert downstream prediction agreement rather
+    than bitwise tree equality."""
+    X, y = friedman1(800, seed=3)
+    f_np = RandomForest(n_trees=10, seed=0, task="regression",
+                        tree_backend="numpy").fit(X, y)
+    f_jx = RandomForest(n_trees=10, seed=0, task="regression",
+                        tree_backend="jax").fit(X, y)
+    pn, pj = f_np.predict(X), f_jx.predict(X)
+    assert np.abs(pn - pj).mean() <= 0.05 * y.std()
+    assert np.abs(pn - pj).max() <= 0.5 * y.std()
+
+
+def test_jax_pallas_interpret_trainer(monkeypatch, jax_x64):
+    """The full trainer through the pallas kernels in interpret mode (the
+    CPU-CI configuration) must still match numpy exactly."""
+    import repro.forest.training as tr
+    monkeypatch.setattr(tr, "_JAX_USE_PALLAS", True)
+    monkeypatch.setattr(tr, "_JAX_INTERPRET", True)
+    X, y = gaussian_classes(300, d=6, n_classes=3, seed=2)
+    f_jx = RandomForest(n_trees=2, seed=0, max_depth=6,
+                        tree_backend="jax").fit(X, y)
+    f_np = RandomForest(n_trees=2, seed=0, max_depth=6,
+                        tree_backend="numpy").fit(X, y)
+    assert_trees_identical(f_np.trees_, f_jx.trees_, "pallas-interpret")
+
+
+# --------------------------------------------------- histogram subtraction
+@pytest.mark.parametrize("backend", ["numpy", "native"])
+@pytest.mark.parametrize("task", ["classification", "regression"])
+def test_subtraction_bit_identity(backend, task, monkeypatch):
+    """sibling = parent - child is exact for the integer-weight histograms
+    forests actually accumulate (classification counts / integer targets),
+    so disabling the trick must not change a single tree."""
+    import repro.forest.training as tr
+    if task == "classification":
+        X, y = gaussian_classes(900, d=8, n_classes=3, seed=12)
+    else:
+        X, y = _int_regression(seed=12)
+    kw = dict(n_trees=5, seed=1, task=task, tree_backend=backend)
+    monkeypatch.setattr(tr, "_HIST_SUBTRACT", True)
+    f_on = RandomForest(**kw).fit(X, y)
+    monkeypatch.setattr(tr, "_HIST_SUBTRACT", False)
+    f_off = RandomForest(**kw).fit(X, y)
+    assert_trees_identical(f_on.trees_, f_off.trees_,
+                           f"subtract/{backend}/{task}")
+
+
+def test_subtraction_reduces_hist_rows(monkeypatch):
+    """With subtraction on, the shallow levels accumulate only the smaller
+    child of each sibling pair — strictly fewer samples through the
+    histogram kernels than with the trick disabled."""
+    import repro.forest.training as tr
+    X, y = gaussian_classes(1200, d=8, n_classes=3, seed=13)
+    totals = {}
+    for sub in (True, False):
+        monkeypatch.setattr(tr, "_HIST_SUBTRACT", sub)
+        seen = []
+        orig = tr._hist_numpy
+
+        def spy(Xb, rows, *a, **k):
+            seen.append(len(rows))
+            return orig(Xb, rows, *a, **k)
+
+        monkeypatch.setattr(tr, "_hist_numpy", spy)
+        RandomForest(n_trees=3, seed=3, tree_backend="numpy").fit(X, y)
+        totals[sub] = sum(seen)
+        monkeypatch.undo()
+    assert totals[True] < totals[False], totals
+
+
+# ------------------------------------------------------------ float32 hists
+@pytest.mark.parametrize("task", ["classification", "regression"])
+def test_float32_hist_backends_identical(task):
+    """The float32 scoring flag must keep numpy and native bit-identical to
+    each other (both cast the same float64 histogram and score through the
+    same numpy kernel)."""
+    if task == "classification":
+        X, y = gaussian_classes(800, d=8, n_classes=3, seed=14)
+    else:
+        X, y = friedman1(700, seed=14)
+    kw = dict(n_trees=5, seed=2, task=task, float32_hist=True)
+    f_np = RandomForest(tree_backend="numpy", **kw).fit(X, y)
+    f_nat = RandomForest(tree_backend="native", **kw).fit(X, y)
+    assert_trees_identical(f_np.trees_, f_nat.trees_, f"f32/{task}")
+
+
+def test_resolve_backend_jax():
+    assert resolve_tree_backend("jax", 64) == "jax"
+    with pytest.raises(ValueError):
+        resolve_tree_backend("tpu", 64)

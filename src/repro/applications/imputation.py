@@ -92,10 +92,16 @@ class ProximityImputer:
             eng = fk.engine
 
             if num_cols:
-                M = obs[:, num_cols].astype(np.float64)      # (N, Fm)
-                V = np.concatenate([X[:, num_cols] * M, M], axis=1)
+                # assembled in place: at out-of-core scale (N ~ 10⁶) the
+                # concat temporaries would rival the engine's own footprint
+                Fm = len(num_cols)
+                V = np.empty((len(X), 2 * Fm), dtype=np.float64)
+                V[:, Fm:] = obs[:, num_cols]                 # mask M
+                V[:, :Fm] = X[:, num_cols]
+                V[:, :Fm] *= V[:, Fm:]                       # X ⊙ M
                 S = eng.matmat(V)                            # one kernel pass
-                numer, denom = S[:, :len(num_cols)], S[:, len(num_cols):]
+                del V
+                numer, denom = S[:, :Fm], S[:, Fm:]
                 for j, f in enumerate(num_cols):
                     m = miss[:, f]
                     ok = denom[m, j] > _TINY

@@ -52,6 +52,10 @@ class ForestKernel:
     routing_backend: str = "auto"    # 'auto'|'native'|'numpy'|'jax'|'pallas'
     tree_backend: str = "auto"       # trainer: 'auto' | 'numpy' | 'native' | 'jax'
     n_jobs: int = 0                  # tree-fitting workers (0 = auto)
+    scratch_dir: Optional[str] = None        # out-of-core: disk scratch for
+    #                                          binned codes / factor spill
+    memory_budget_bytes: Optional[int] = None  # out-of-core: bound transient
+    #                                            build + op intermediates
 
     forest: Optional[BaseForest] = None
     ctx: Optional[EnsembleContext] = None
@@ -69,18 +73,29 @@ class ForestKernel:
             max_features=self.max_features, n_bins=self.n_bins,
             task=self.task, seed=self.seed, n_jobs=self.n_jobs,
             routing_backend=self.routing_backend,
-            tree_backend=self.tree_backend)
+            tree_backend=self.tree_backend,
+            xb_scratch=self.scratch_dir)
         self.forest.fit(X, y)
         return self
 
+    def _context_row_chunk(self) -> Optional[int]:
+        """Routing/mass-accumulation chunk under the memory budget: ~32
+        transient bytes per (row, tree) cell during the context build."""
+        if self.memory_budget_bytes is None:
+            return None
+        return max(1024, self.memory_budget_bytes // max(32 * self.n_trees, 1))
+
     def build_kernel_cache(self) -> "ForestKernel":
         assert self.forest is not None, "call fit_forest first"
-        self.ctx = EnsembleContext.from_forest(self.forest)
+        self.ctx = EnsembleContext.from_forest(
+            self.forest, row_chunk=self._context_row_chunk())
         self.assignment = get_assignment(self.kernel_method, self.ctx)
         self.engine = ProximityEngine(self.ctx, self.assignment,
                                       forest=self.forest,
                                       backend=self.engine_backend,
-                                      dtype=self.dtype)
+                                      dtype=self.dtype,
+                                      memory_budget_bytes=self.memory_budget_bytes,
+                                      factor_scratch_dir=self.scratch_dir)
         self.Q_ = self.engine.Q
         self.W_ = self.engine.W
         return self

@@ -69,26 +69,63 @@ class EnsembleContext:
     @classmethod
     def from_forest(cls, forest: BaseForest, X: Optional[np.ndarray] = None,
                     y: Optional[np.ndarray] = None,
-                    leaves: Optional[np.ndarray] = None) -> "EnsembleContext":
+                    leaves: Optional[np.ndarray] = None,
+                    row_chunk: Optional[int] = None) -> "EnsembleContext":
+        """``row_chunk`` routes X and accumulates the leaf masses in row
+        chunks of that size, bounding the transient (chunk, T) footprint for
+        out-of-core builds.  Both masses are sums of integers, so chunked
+        accumulation is order-exact and the digest matches the default path.
+        """
         X = forest.X_ if X is None else X
         y = forest.y_ if y is None else y
-        if leaves is None:
-            leaves = forest.apply(X)                  # (N, T) — batched pass
-        n, T = leaves.shape
         ta = forest.tree_arrays()                     # cached at fit time
         n_leaves = ta.n_leaves
         leaf_offset = ta.leaf_offset
         L = ta.total_leaves
-        gl = leaves.astype(np.int64) + leaf_offset[None, :]
-        leaf_mass = np.bincount(gl.ravel(), minlength=L).astype(np.float64)
-
         inbag = forest.inbag_
+
+        if row_chunk is None:
+            if leaves is None:
+                leaves = forest.apply(X)              # (N, T) — batched pass
+            n, T = leaves.shape
+            gl = leaves.astype(np.int64) + leaf_offset[None, :]
+            leaf_mass = np.bincount(gl.ravel(), minlength=L).astype(np.float64)
+            leaf_mass_inbag = None
+            if inbag is not None:
+                leaf_mass_inbag = np.bincount(
+                    gl.T.ravel(), weights=inbag.astype(np.float64).ravel(),
+                    minlength=L)
+        else:
+            n = len(X) if leaves is None else len(leaves)
+            lv_out = None
+            mass_i = np.zeros(L, dtype=np.int64)
+            mass_inbag = np.zeros(L, dtype=np.float64) \
+                if inbag is not None else None
+            for i0 in range(0, n, row_chunk):
+                i1 = min(i0 + row_chunk, n)
+                if leaves is None:
+                    lv = forest.apply(np.asarray(X[i0:i1]))
+                    if lv_out is None:
+                        lv_out = np.empty((n, lv.shape[1]), dtype=lv.dtype)
+                    lv_out[i0:i1] = lv
+                else:
+                    lv = np.asarray(leaves[i0:i1])
+                gl = lv.astype(np.int64) + leaf_offset[None, :]
+                mass_i += np.bincount(gl.ravel(), minlength=L)
+                if mass_inbag is not None:
+                    mass_inbag += np.bincount(
+                        gl.T.ravel(),
+                        weights=inbag[:, i0:i1].astype(np.float64).ravel(),
+                        minlength=L)
+            if leaves is None:
+                leaves = lv_out
+            n, T = leaves.shape
+            leaf_mass = mass_i.astype(np.float64)
+            leaf_mass_inbag = mass_inbag
+
         if inbag is not None:
             oob = inbag == 0
             oob_count = oob.sum(0).astype(np.int64)
-            leaf_mass_inbag = np.bincount(
-                gl.T.ravel(), weights=inbag.astype(np.float64).ravel(),
-                minlength=L)
         else:
             oob, oob_count = None, None
             leaf_mass_inbag = leaf_mass.copy()

@@ -76,7 +76,9 @@ class ProximityEngine:
                  dtype=np.float64, oos_cache_size: int = 8,
                  ref_cache_size: int = 16,
                  factors: Optional[Tuple[np.ndarray,
-                                         Optional[np.ndarray]]] = None):
+                                         Optional[np.ndarray]]] = None,
+                 memory_budget_bytes: Optional[int] = None,
+                 factor_scratch_dir: Optional[str] = None):
         if backend not in ENGINE_BACKENDS:
             raise ValueError(f"unknown engine backend {backend!r}; "
                              f"have {ENGINE_BACKENDS}")
@@ -91,6 +93,9 @@ class ProximityEngine:
         self.backend = backend
         self.dtype = np.dtype(dtype)
         self.total_leaves = int(ctx.total_leaves)
+        self.memory_budget_bytes = None if memory_budget_bytes is None \
+            else int(memory_budget_bytes)
+        self._factor_scratch_dir = factor_scratch_dir
 
         # dense factors (device-ready; one build, reused by every op).
         # ``factors=(q, w)`` injects precomputed weight arrays — the
@@ -112,10 +117,12 @@ class ProximityEngine:
                     assignment.reference_weights(ctx.leaves),
                     dtype=self.dtype)
 
-        # CSR factors (scipy path + memory accounting)
-        self.Q = build_leaf_map(self.gl, self.q, self.total_leaves, self.dtype)
-        self.W = self.Q if assignment.symmetric else \
-            build_leaf_map(self.gl, self.w, self.total_leaves, self.dtype)
+        # CSR factors (scipy path + memory accounting).  Under a memory
+        # budget the streamed builder bounds the (chunk, T) build transient
+        # and spills indices/data to scratch memmaps when they alone would
+        # eat the budget — bit-identical output either way.
+        self.Q = self._build_factor(self.q)
+        self.W = self.Q if assignment.symmetric else self._build_factor(self.w)
 
         # stacked global leaf-value table (forest payloads, tree-major)
         self.leaf_values = None if forest is None else \
@@ -123,6 +130,20 @@ class ProximityEngine:
 
         self._init_runtime_state(oos_cache_size=oos_cache_size,
                                  ref_cache_size=ref_cache_size)
+
+    def _build_factor(self, weights: np.ndarray) -> sp.csr_matrix:
+        budget = self.memory_budget_bytes
+        if budget is None:
+            return build_leaf_map(self.gl, weights, self.total_leaves,
+                                  self.dtype)
+        from .factorization import streamed_leaf_map
+        T = self.gl.shape[1]
+        # ~32 bytes of build transient per (row, tree) cell
+        row_chunk = max(1024, budget // max(32 * T, 1))
+        return streamed_leaf_map(self.gl, weights, self.total_leaves,
+                                 self.dtype, row_chunk=row_chunk,
+                                 memmap_threshold_bytes=budget,
+                                 scratch_dir=self._factor_scratch_dir)
 
     def _init_runtime_state(self, oos_cache=None, oos_cache_size: int = 8,
                             ref_cache_size: int = 16,
@@ -132,6 +153,8 @@ class ProximityEngine:
         initialize it, so new runtime attributes cannot silently go missing
         on one of them.  Expects the factor attributes (gl/q/w/Q/W, dtype,
         backend, …) to be set already."""
+        # factor-slicing views never pass the budget through __init__
+        self.memory_budget_bytes = getattr(self, "memory_budget_bytes", None)
         self._train_state = QueryState(gl=self.gl, q=self.q, Q=self.Q)
         # routed OOS query states; a view may share its parent's cache (one
         # routed batch serves both engines).  The tiered server touches the
@@ -233,7 +256,21 @@ class ProximityEngine:
         if col_mask is not None:
             V = V * np.asarray(col_mask, dtype=self.dtype)[:, None]
         qs = self.query_state(X)
-        out = self._dispatch_matmat(qs, V)
+        cb = self._col_chunk(V.shape[1])
+        if cb < V.shape[1]:
+            # bound the (total_leaves, C) bucket table of P V = Q (Wᵀ V):
+            # columns are independent, so block splitting is bit-identical
+            first = self._dispatch_matmat(
+                qs, np.ascontiguousarray(V[:, :cb]), ref_key=False)
+            out = np.empty((first.shape[0], V.shape[1]), dtype=first.dtype)
+            out[:, :cb] = first
+            del first
+            for j0 in range(cb, V.shape[1], cb):
+                j1 = min(j0 + cb, V.shape[1])
+                out[:, j0:j1] = self._dispatch_matmat(
+                    qs, np.ascontiguousarray(V[:, j0:j1]), ref_key=False)
+        else:
+            out = self._dispatch_matmat(qs, V)
         if normalized:
             d = self.row_sums(X=X)
             out = out / np.maximum(d, np.finfo(self.dtype).tiny)[:, None]
@@ -268,7 +305,9 @@ class ProximityEngine:
         table would dwarf the factors), and total cached bytes are bounded.
         """
         keepalive = None
-        if key is None and V.shape[1] <= 32:
+        if key is False:        # budget-chunked slice: never worth caching
+            key = None
+        elif key is None and V.shape[1] <= 32:
             key = ("id", id(V))
             keepalive = V
         if key is not None:
@@ -350,6 +389,38 @@ class ProximityEngine:
         collision intermediate stays within ~budget elements."""
         return max(1, budget // max(8 * n_cols, 1))
 
+    def _op_row_chunk(self, n_cols: int) -> int:
+        """`_row_chunk` honoring ``memory_budget_bytes``: the element budget
+        shrinks to ~budget/8 bytes-per-element so dense op intermediates fit
+        the configured ceiling (floor keeps chunks from degenerating)."""
+        if self.memory_budget_bytes is None:
+            return self._row_chunk(n_cols)
+        elems = min(1 << 25, max(1 << 12, self.memory_budget_bytes // 8))
+        return self._row_chunk(n_cols, budget=elems)
+
+    def _col_chunk(self, n_cols: int) -> int:
+        """Columns per matmat pass: the factored product materializes a
+        dense (total_leaves, C) bucket table, which at out-of-core scale
+        (millions of leaves) dwarfs every other working set — keep it
+        within half the budget by splitting V's independent columns."""
+        if self.memory_budget_bytes is None or n_cols <= 1:
+            return n_cols
+        per_col = 8 * max(self.total_leaves, 1)
+        return max(1, min(n_cols, self.memory_budget_bytes // (2 * per_col)))
+
+    def _budget_block(self, block: int) -> int:
+        """Sparse-path row-block size honoring ``memory_budget_bytes``.
+
+        A CSR product block holds ~16 bytes per nonzero; the expected
+        nonzeros per product row scale with T × (mean reference rows per
+        leaf), so cap the block where a quarter of the budget covers it.
+        """
+        if self.memory_budget_bytes is None:
+            return block
+        T = self.gl.shape[1]
+        per_row = 16 * T * max(1, int(self.W.nnz) // max(self.total_leaves, 1))
+        return max(256, min(block, self.memory_budget_bytes // (4 * per_row)))
+
     # Above this reference-set size, train-side (X=None) topk and squared
     # row sums drop to the sparse CSR path on every backend: those are
     # all-pairs batch jobs where CSR restricts work to colliding pairs,
@@ -381,7 +452,7 @@ class ProximityEngine:
             import jax.numpy as jnp
             from .jax_ops import swlc_block
             out = np.empty((len(rows), gl_w.shape[0]), dtype=self.dtype)
-            step = self._row_chunk(gl_w.shape[0])
+            step = self._op_row_chunk(gl_w.shape[0])
             with _x64_scope(self._use_x64):
                 gl_w_d, w_d = jnp.asarray(gl_w), jnp.asarray(w)
                 for i0 in range(0, len(rows), step):
@@ -416,6 +487,7 @@ class ProximityEngine:
 
         if self.backend == "scipy" or (
                 X is None and self.W.shape[0] > self._SPARSE_TRAIN_CUTOVER):
+            block = self._budget_block(block)
             WT = self.W.T.tocsc()
             for i0 in range(0, n, block):
                 B = (qs.Q[i0:i0 + block] @ WT).tocsr()
@@ -436,7 +508,7 @@ class ProximityEngine:
         if class_ids is not None:
             onehot = np.zeros((self.W.shape[0], n_classes), dtype=self.dtype)
             onehot[np.arange(self.W.shape[0]), class_ids] = 1.0
-        step = min(block, self._row_chunk(self.W.shape[0]))
+        step = min(block, self._op_row_chunk(self.W.shape[0]))
         for i0 in range(0, n, step):
             rows = np.arange(i0, min(i0 + step, n))
             B = self.kernel_block(rows, X_rows=X)
@@ -502,7 +574,8 @@ class ProximityEngine:
         qs = self.query_state(X)
         if self.backend == "scipy" or (
                 X is None and self.W.shape[0] > self._SPARSE_TRAIN_CUTOVER):
-            return topk_neighbors(qs.Q, self.W, k, block=block)
+            return topk_neighbors(qs.Q, self.W, k,
+                                  block=self._budget_block(block))
         n = qs.Q.shape[0]
         kk = min(k, self.W.shape[0])
         idx = np.zeros((n, k), dtype=np.int64)
@@ -510,7 +583,7 @@ class ProximityEngine:
         gl_w_d = w_d = None
         if self.backend == "jax":
             import jax.numpy as jnp
-            block = min(block, self._row_chunk(self.W.shape[0]))
+            block = min(block, self._op_row_chunk(self.W.shape[0]))
             with _x64_scope(self._use_x64):
                 gl_w_d, w_d = jnp.asarray(self.gl), jnp.asarray(self.w)
         for i0 in range(0, n, block):
@@ -536,6 +609,11 @@ class ProximityEngine:
 
     # ---------------- accounting ----------------
     def memory_bytes(self) -> dict:
+        """Resident factor bytes per component; when a
+        ``memory_budget_bytes`` is configured the report additionally
+        carries the budget and whether the factors fit it, and both are
+        pushed to the global metrics registry (``engine_memory_bytes``
+        gauge family + ``engine_memory_budget_bytes``)."""
         from .leafmap import sparse_bytes
         dense = self.gl.nbytes + self.q.nbytes + \
             (0 if self.w is self.q else self.w.nbytes)
@@ -544,6 +622,19 @@ class ProximityEngine:
         if self.leaf_values is not None:
             out["leaf_values"] = int(self.leaf_values.nbytes)
         out["total"] = sum(out.values())
+        if self.memory_budget_bytes is not None:
+            out["budget"] = int(self.memory_budget_bytes)
+            out["within_budget"] = bool(out["total"] <= out["budget"])
+        from ..obs.metrics import global_registry
+        g = global_registry().gauge("engine_memory_bytes",
+                                    "resident engine factor bytes",
+                                    labels=("component",))
+        for comp in ("dense_factors", "Q", "W", "total"):
+            g.labels(component=comp).set(float(out[comp]))
+        if self.memory_budget_bytes is not None:
+            global_registry().gauge(
+                "engine_memory_budget_bytes",
+                "configured engine memory budget").set(float(out["budget"]))
         return out
 
 

@@ -221,4 +221,22 @@ def sharded_swlc_matmat(mesh: Mesh, gl: jax.Array, q: jax.Array, w: jax.Array,
     fn = _shard_map()(local, mesh=mesh,
                       in_specs=(spec_nt, spec_nt, spec_nt, spec_nc),
                       out_specs=spec_nc)
-    return fn(gl, q, w, V)
+    # observed into the same engine_op_seconds family the profiled engine
+    # wrapper uses, so sharded calls show up in /metrics and snapshots
+    # instead of bypassing observability (block_until_ready keeps the
+    # timing honest under async dispatch).
+    import time as _time
+
+    from ..obs.metrics import global_registry
+    reg = global_registry()
+    t0 = _time.perf_counter()
+    out = fn(gl, q, w, V)
+    out.block_until_ready()
+    dt = _time.perf_counter() - t0
+    reg.histogram("engine_op_seconds", "engine op latency (s)",
+                  labels=("op", "backend", "tier")).labels(
+        op="sharded_matmat", backend="jax", tier="").observe(dt)
+    reg.counter("engine_op_calls_total", "engine op invocations",
+                labels=("op", "backend", "tier")).labels(
+        op="sharded_matmat", backend="jax", tier="").inc()
+    return out

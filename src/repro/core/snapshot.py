@@ -2,10 +2,13 @@
 
 ``save_kernel`` captures a fitted :class:`~repro.core.api.ForestKernel` as a
 single ``np.savez_compressed`` archive: the packed trees, binner edges,
-in-bag state, training references, routed training leaves, and the dense
-engine weight factors ``q``/``w``.  A JSON **manifest** (stored as a uint8
-array inside the archive) records the format name, a version field, the
-kernel config, a per-array sha256 checksum, and two structural digests:
+in-bag state, training references, routed training leaves, and the engine
+weight factors as **compressed CSR components** (``indptr/indices/data`` of
+the leaf maps Q/W — zeros dropped, which is most of the array for OOB/GAP
+kernels; format v2).  v1 archives, which stored the dense ``q``/``w``,
+load with a one-time migration note.  A JSON **manifest** (stored as a
+uint8 array inside the archive) records the format name, a version field,
+the kernel config, a per-array sha256 checksum, and two structural digests:
 
 - ``ctx_digest``   — sha256 of the rebuilt ensemble context (T, θ),
 - ``factor_digest`` — sha256 of the dense factors of P = Q Wᵀ.
@@ -42,7 +45,11 @@ __all__ = ["save_kernel", "load_kernel", "SnapshotError",
            "SNAPSHOT_FORMAT", "SNAPSHOT_VERSION"]
 
 SNAPSHOT_FORMAT = "repro-forest-kernel"
-SNAPSHOT_VERSION = 1
+SNAPSHOT_VERSION = 2
+SUPPORTED_VERSIONS = (1, 2)
+
+# one-time note when a dense-factor v1 archive is loaded
+_v1_migration_noted = False
 
 _TREE_KEYS = ("node_offset", "depth", "feature", "threshold", "left",
               "right", "leaf_id", "value", "n_node_samples")
@@ -85,9 +92,16 @@ def save_kernel(fk, path) -> dict:
     arrays["X"] = np.asarray(forest.X_, dtype=np.float64)
     arrays["y"] = np.asarray(forest.y_)
     arrays["leaves"] = np.ascontiguousarray(fk.ctx.leaves, dtype=np.int32)
-    arrays["factor_q"] = eng.q
+    # factors as CSR components (v2): the dense (N, T) weight arrays are
+    # recovered exactly on load (dropped entries were exactly 0.0), while
+    # the archive only pays for the nonzeros.
+    arrays["factor_q_data"] = np.asarray(eng.Q.data)
+    arrays["factor_q_indices"] = np.asarray(eng.Q.indices)
+    arrays["factor_q_indptr"] = np.asarray(eng.Q.indptr)
     if eng.w is not eng.q:
-        arrays["factor_w"] = eng.w
+        arrays["factor_w_data"] = np.asarray(eng.W.data)
+        arrays["factor_w_indices"] = np.asarray(eng.W.indices)
+        arrays["factor_w_indptr"] = np.asarray(eng.W.indptr)
 
     config = fk._config_kwargs()
     config["dtype"] = np.dtype(config["dtype"]).name
@@ -109,6 +123,24 @@ def save_kernel(fk, path) -> dict:
     np.savez_compressed(path, **arrays)
     _observe_snapshot("save", time.perf_counter() - t0)
     return manifest
+
+
+def _dense_factor_from_csr(data: np.ndarray, indices: np.ndarray,
+                           indptr: np.ndarray, leaf_offset: np.ndarray,
+                           n_trees: int) -> np.ndarray:
+    """Exact inverse of ``build_leaf_map`` for forest leaf maps.
+
+    Global leaf ranges are disjoint per tree, so each stored column index
+    maps to a unique tree via ``searchsorted(leaf_offset)``; entries the
+    CSR dropped carried weight exactly 0.0, which the zero initialization
+    restores bit-for-bit (weights are nonnegative — no -0.0 to lose).
+    """
+    n = len(indptr) - 1
+    rows = np.repeat(np.arange(n), np.diff(indptr))
+    t = np.searchsorted(leaf_offset, indices, side="right") - 1
+    q = np.zeros((n, n_trees), dtype=data.dtype)
+    q[rows, t] = data
+    return q
 
 
 def load_kernel(path, engine_backend: Optional[str] = None):
@@ -134,10 +166,20 @@ def load_kernel(path, engine_backend: Optional[str] = None):
     if manifest.get("format") != SNAPSHOT_FORMAT:
         raise SnapshotError(f"{path}: format {manifest.get('format')!r} != "
                             f"{SNAPSHOT_FORMAT!r}")
-    if manifest.get("version") != SNAPSHOT_VERSION:
+    version = manifest.get("version")
+    if version not in SUPPORTED_VERSIONS:
         raise SnapshotError(
-            f"{path}: snapshot version {manifest.get('version')!r} not "
-            f"supported (have {SNAPSHOT_VERSION})")
+            f"{path}: snapshot version {version!r} not "
+            f"supported (have {SUPPORTED_VERSIONS})")
+    if version == 1:
+        global _v1_migration_noted
+        if not _v1_migration_noted:
+            _v1_migration_noted = True
+            import warnings
+            warnings.warn(
+                f"{path}: dense-factor snapshot (format v1) — loads fine, "
+                "but re-saving writes the compressed CSR v2 layout and "
+                "shrinks the archive", stacklevel=2)
     for name, want in manifest["checksums"].items():
         if name not in arrays:
             raise SnapshotError(f"{path}: missing array {name!r}")
@@ -185,10 +227,23 @@ def load_kernel(path, engine_backend: Optional[str] = None):
     fk.ctx = ctx
     fk.assignment = get_assignment(fk.kernel_method, ctx)
 
-    w = arrays.get("factor_w")
-    fk.engine = ProximityEngine(ctx, fk.assignment, forest=forest,
-                                backend=fk.engine_backend, dtype=fk.dtype,
-                                factors=(arrays["factor_q"], w))
+    if version == 1:
+        q, w = arrays["factor_q"], arrays.get("factor_w")
+    else:
+        T = ctx.leaves.shape[1]
+        q = _dense_factor_from_csr(
+            arrays["factor_q_data"], arrays["factor_q_indices"],
+            arrays["factor_q_indptr"], ctx.leaf_offset, T)
+        w = None
+        if "factor_w_data" in arrays:
+            w = _dense_factor_from_csr(
+                arrays["factor_w_data"], arrays["factor_w_indices"],
+                arrays["factor_w_indptr"], ctx.leaf_offset, T)
+    fk.engine = ProximityEngine(
+        ctx, fk.assignment, forest=forest, backend=fk.engine_backend,
+        dtype=fk.dtype, factors=(q, w),
+        memory_budget_bytes=getattr(fk, "memory_budget_bytes", None),
+        factor_scratch_dir=getattr(fk, "scratch_dir", None))
     if factor_digest(fk.engine.gl, fk.engine.q,
                      fk.engine.w) != manifest["factor_digest"]:
         raise SnapshotError(f"{path}: rebuilt factor digest mismatch")

@@ -7,8 +7,10 @@ OOB masks, leaf masses, tree weights) that the SWLC weight assignments in
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
+import tempfile
 from concurrent.futures import ThreadPoolExecutor
 from typing import List, Optional
 
@@ -63,6 +65,10 @@ class BaseForest:
     tree_backend: str = "auto"       # trainer: 'auto'|'numpy'|'native'|'jax'
     tree_block: int = 0              # native batch width (0 auto, <0 all)
     float32_hist: bool = False       # numpy/native: float32 split scoring
+    xb_scratch: Optional[str] = None  # out-of-core fit: directory for the
+    #                                   disk-backed binned-code scratch file
+    #                                   (streamed in, trained from memmap,
+    #                                   removed on success AND failure)
 
     # fitted state
     trees_: Optional[List[Tree]] = None
@@ -85,6 +91,26 @@ class BaseForest:
             splitter=self.splitter, tree_backend=self.tree_backend,
             float32_hist=self.float32_hist)
 
+    @contextlib.contextmanager
+    def _binned_codes(self, X: np.ndarray):
+        """Binned codes for fit: in RAM by default, or — when ``xb_scratch``
+        names a directory — streamed chunk-by-chunk into a uniquely-named
+        disk-backed memmap there (concurrent fits never collide).  The
+        scratch file is unlinked when the block exits, success or failure,
+        so out-of-core training leaves no residue; the live mapping stays
+        valid until the last array reference drops."""
+        if self.xb_scratch is None:
+            yield self.binner_.transform(X)
+            return
+        os.makedirs(self.xb_scratch, exist_ok=True)
+        fd, path = tempfile.mkstemp(prefix="xb_", suffix=".mm",
+                                    dir=self.xb_scratch)
+        os.close(fd)
+        try:
+            yield self.binner_.transform_memmap(X, path)
+        finally:
+            os.unlink(path)
+
     def fit(self, X: np.ndarray, y: np.ndarray) -> "BaseForest":
         rng = np.random.default_rng(self.seed)
         X = np.asarray(X, dtype=np.float64)
@@ -96,7 +122,6 @@ class BaseForest:
             y = np.asarray(y, dtype=np.float64)
             self.n_classes_ = 0
         self.binner_ = Binner(X, self.n_bins, rng)
-        Xb = self.binner_.transform(X)
         self.inbag_ = bootstrap_counts(len(X), self.n_trees, rng, self.bootstrap)
         params = self._params()
         # Independent per-tree RNG streams (SeedSequence spawn) keep results
@@ -104,30 +129,34 @@ class BaseForest:
         child_rngs = rng.spawn(self.n_trees)
 
         backend = resolve_tree_backend(self.tree_backend, self.binner_.n_bins)
-        if backend in ("native", "jax"):
-            # Batched level-synchronous growth: one native/device call per
-            # level spans every tree's frontier, so OpenMP threads (native)
-            # or kernel launches (jax) stay saturated at deep narrow levels
-            # and `n_jobs` Python workers never stack on top (no
-            # n_jobs × OMP oversubscription, no per-tree device dispatch).
-            self.trees_ = fit_forest_binned(Xb, y, self.inbag_, params,
-                                            child_rngs, self.binner_,
-                                            backend=backend,
-                                            tree_block=self.tree_block)
-        else:
-            def fit_one(t: int) -> Tree:
-                w = self.inbag_[t]
-                sel = np.nonzero(w)[0]
-                return fit_tree_binned(Xb[sel], y[sel],
-                                       w[sel].astype(np.float64),
-                                       params, child_rngs[t], self.binner_)
-
-            jobs = _resolve_jobs(self.n_jobs, self.n_trees)
-            if jobs == 1:
-                self.trees_ = [fit_one(t) for t in range(self.n_trees)]
+        with self._binned_codes(X) as Xb:
+            if backend in ("native", "jax"):
+                # Batched level-synchronous growth: one native/device call
+                # per level spans every tree's frontier, so OpenMP threads
+                # (native) or kernel launches (jax) stay saturated at deep
+                # narrow levels and `n_jobs` Python workers never stack on
+                # top (no n_jobs × OMP oversubscription, no per-tree device
+                # dispatch).
+                self.trees_ = fit_forest_binned(Xb, y, self.inbag_, params,
+                                                child_rngs, self.binner_,
+                                                backend=backend,
+                                                tree_block=self.tree_block)
             else:
-                with ThreadPoolExecutor(max_workers=jobs) as ex:
-                    self.trees_ = list(ex.map(fit_one, range(self.n_trees)))
+                def fit_one(t: int) -> Tree:
+                    w = self.inbag_[t]
+                    sel = np.nonzero(w)[0]
+                    return fit_tree_binned(Xb[sel], y[sel],
+                                           w[sel].astype(np.float64),
+                                           params, child_rngs[t],
+                                           self.binner_)
+
+                jobs = _resolve_jobs(self.n_jobs, self.n_trees)
+                if jobs == 1:
+                    self.trees_ = [fit_one(t) for t in range(self.n_trees)]
+                else:
+                    with ThreadPoolExecutor(max_workers=jobs) as ex:
+                        self.trees_ = list(ex.map(fit_one,
+                                                  range(self.n_trees)))
         self.tree_weights_ = np.ones(self.n_trees, dtype=np.float64)
         self._cache_tables()
         return self
@@ -233,7 +262,6 @@ class GradientBoostedTrees(BaseForest):
             self.base_score_ = float(yf.mean())
             self.n_classes_ = 0
         self.binner_ = Binner(X, self.n_bins, rng)
-        Xb = self.binner_.transform(X)
         self.inbag_ = bootstrap_counts(len(X), self.n_trees, rng, self.bootstrap)
 
         params = self._params()
@@ -249,18 +277,20 @@ class GradientBoostedTrees(BaseForest):
             return float(np.mean((yf - F) ** 2))
 
         prev = loss(F)
-        for t in range(self.n_trees):
-            resid = (yf - 1.0 / (1.0 + np.exp(-F))) if binary else (yf - F)
-            w = self.inbag_[t]
-            sel = np.nonzero(w)[0]
-            tr = fit_tree_binned(Xb[sel], resid[sel], w[sel].astype(np.float64),
-                                 params, rng, self.binner_)
-            self.trees_.append(tr)
-            leaves = route_tree(tr, X)
-            F = F + self.learning_rate * tr.leaf_values()[leaves, 1]
-            cur = loss(F)
-            tw.append(max(prev - cur, 0.0))
-            prev = cur
+        with self._binned_codes(X) as Xb:
+            for t in range(self.n_trees):
+                resid = (yf - 1.0 / (1.0 + np.exp(-F))) if binary else (yf - F)
+                w = self.inbag_[t]
+                sel = np.nonzero(w)[0]
+                tr = fit_tree_binned(Xb[sel], resid[sel],
+                                     w[sel].astype(np.float64),
+                                     params, rng, self.binner_)
+                self.trees_.append(tr)
+                leaves = route_tree(tr, X)
+                F = F + self.learning_rate * tr.leaf_values()[leaves, 1]
+                cur = loss(F)
+                tw.append(max(prev - cur, 0.0))
+                prev = cur
         tw = np.asarray(tw)
         self.tree_weights_ = tw / max(tw.sum(), 1e-12)
         self._cache_tables()

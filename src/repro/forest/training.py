@@ -206,24 +206,58 @@ class Binner:
         return [self.edges_flat[self.edge_offset[f]:self.edge_offset[f + 1]]
                 for f in range(len(self.edge_count))]
 
-    def transform(self, X: np.ndarray) -> np.ndarray:
+    @property
+    def code_dtype(self) -> np.dtype:
+        """Dtype of the emitted bin codes (uint8 iff they fit a byte)."""
+        return np.dtype(np.uint8 if self.n_bins <= 256 else np.int16)
+
+    def transform(self, X: np.ndarray, out: Optional[np.ndarray] = None
+                  ) -> np.ndarray:
         """Map raw features to bin codes; bin(x) <= b  <=>  x <= edges[b].
 
         One broadcast comparison pass per sample chunk (no per-feature
         Python loop); exact ``searchsorted(edges_f, x, side='left')``
         semantics including NaN (which bins past the last edge).
+
+        ``out`` streams the codes into a preallocated (n, d) array of
+        :attr:`code_dtype` — typically an ``np.memmap`` — so only one
+        (chunk, d, E) comparison transient is ever resident.  ``X`` itself
+        may be disk-backed; it is read in the same row chunks.  The chunk
+        sweep is identical with or without ``out``, so streamed codes are
+        bit-identical to the in-RAM result.
         """
         n, d = X.shape
-        dt = np.uint8 if self.n_bins <= 256 else np.int16
-        out = np.empty((n, d), dtype=dt)
+        dt = self.code_dtype
+        if out is None:
+            out = np.empty((n, d), dtype=dt)
+        elif out.shape != (n, d) or out.dtype != dt:
+            raise ValueError(
+                f"out must be shape {(n, d)} dtype {dt}, got "
+                f"{out.shape} {out.dtype}")
         pe = self._pad_edges
         cnt = self.edge_count[None, :]
         chunk = max(1, int(_TILE_ELEMS * 4) // max(pe.shape[1] * d, 1))
         for i0 in range(0, n, chunk):
-            x = X[i0:i0 + chunk]
+            x = np.asarray(X[i0:i0 + chunk])
             ge = pe[None, :, :] >= x[:, :, None]     # (c, d, E)
             out[i0:i0 + chunk] = (cnt - ge.sum(axis=2)).astype(dt)
         return out
+
+    def transform_memmap(self, X: np.ndarray, path) -> np.memmap:
+        """Stream-bin ``X`` into a disk-backed code matrix at ``path``.
+
+        Creates an ``np.memmap`` (mode ``w+``) of shape (n, d) with the
+        binner's :attr:`code_dtype`, fills it chunk-by-chunk through
+        :meth:`transform`, flushes, and returns the live mapping.  The
+        numpy/native trainers accept the result directly and grow trees
+        bit-identical to the in-RAM codes (histogram/partition passes read
+        disk-backed codes in bounded row chunks).
+        """
+        n, d = X.shape
+        mm = np.memmap(path, dtype=self.code_dtype, mode="w+", shape=(n, d))
+        self.transform(X, out=mm)
+        mm.flush()
+        return mm
 
     def threshold(self, f: int, b: int) -> float:
         c = int(self.edge_count[f])
@@ -241,6 +275,23 @@ class Binner:
         idx = self.edge_offset[f] + np.minimum(b, np.maximum(c - 1, 0))
         out = self.edges_flat[np.minimum(idx, len(self.edges_flat) - 1)]
         return np.where(c > 0, out, np.inf)
+
+
+def _as_code_matrix(Xb: np.ndarray) -> np.ndarray:
+    """Normalize a binned-code matrix without destroying memmap-ness.
+
+    ``np.asarray`` on an ``np.memmap`` returns a plain-ndarray *view* and
+    the trainer could no longer tell the codes are disk-resident; keeping
+    the subclass lets the histogram passes switch to bounded row-chunked
+    reads (`_is_streamed`).
+    """
+    return Xb if isinstance(Xb, np.ndarray) else np.asarray(Xb)
+
+
+def _is_streamed(Xb: np.ndarray) -> bool:
+    """True when the code matrix is disk-backed and must be read in bounded
+    row chunks instead of one (m, d) frontier gather."""
+    return isinstance(Xb, np.memmap)
 
 
 def _node_values(y: np.ndarray, w: np.ndarray, params: TreeParams) -> np.ndarray:
@@ -268,8 +319,8 @@ def fit_tree_binned(Xb: np.ndarray, y: np.ndarray, w: np.ndarray,
     backend = resolve_tree_backend(params.tree_backend, binner.n_bins)
     rows = np.arange(Xb.shape[0], dtype=np.int64)
     task = (rows, np.asarray(w, dtype=np.float64), rng)
-    return _grow_trees(np.asarray(Xb), np.asarray(y), [task], params, binner,
-                       backend)[0]
+    return _grow_trees(_as_code_matrix(Xb), np.asarray(y), [task], params,
+                       binner, backend)[0]
 
 
 def fit_forest_binned(Xb: np.ndarray, y: np.ndarray, inbag: np.ndarray,
@@ -298,7 +349,7 @@ def fit_forest_binned(Xb: np.ndarray, y: np.ndarray, inbag: np.ndarray,
         block = T
     else:
         block = max(1, int(tree_block))
-    Xb = np.asarray(Xb)
+    Xb = _as_code_matrix(Xb)
     trees: List[Tree] = []
     for b0 in range(0, T, block):
         tasks = []
@@ -425,6 +476,12 @@ def _hist_numpy(Xb: np.ndarray, rows: np.ndarray, w: np.ndarray,
     flat indices whenever ``gc * d * B * C < 2**31``.  Per-bin accumulation
     order is sample order — identical to the untiled bincount and to the
     native kernel.
+
+    A disk-backed (memmap) ``Xb`` skips the upfront (m, d) frontier gather
+    and instead gathers each feature tile's (m, td) codes directly — the
+    tile is already bounded to ``_TILE_ELEMS`` elements, and exactly ONE
+    bincount per tile is kept either way, so the per-bin float accumulation
+    order (and hence the grown trees) is bit-identical to the in-RAM path.
     """
     gc = len(bounds) - 1
     hist = np.zeros((gc, d, B, C), dtype=np.float64)
@@ -434,7 +491,8 @@ def _hist_numpy(Xb: np.ndarray, rows: np.ndarray, w: np.ndarray,
     size = gc * d * B
     idx_dt = np.int32 if size * C < 2 ** 31 else np.int64
     loc = np.repeat(np.arange(gc, dtype=idx_dt), np.diff(bounds))
-    codes = Xb[rows]                                  # (m, d) small dtype
+    stream = _is_streamed(Xb)
+    codes = None if stream else Xb[rows]              # (m, d) small dtype
     td_max = max(1, min(d, int(_TILE_ELEMS // max(m, 1))))
     if cls:
         yl = y_inst.astype(idx_dt)
@@ -444,9 +502,10 @@ def _hist_numpy(Xb: np.ndarray, rows: np.ndarray, w: np.ndarray,
     for f0 in range(0, d, td_max):
         f1 = min(f0 + td_max, d)
         td = f1 - f0
+        ct = np.asarray(Xb[rows, f0:f1]) if stream else codes[:, f0:f1]
         base = (loc[:, None] * np.int64(td).astype(idx_dt)
                 + np.arange(td, dtype=idx_dt)[None, :]) * B \
-            + codes[:, f0:f1].astype(idx_dt)
+            + ct.astype(idx_dt)
         tsize = gc * td * B
         if cls:
             flat = base * C + yl[:, None]
@@ -685,7 +744,11 @@ def _grow_trees(Xb: np.ndarray, y: np.ndarray, tasks: Sequence[tuple],
         import jax.numpy as jnp
         from ..kernels.histogram import ops as hops
         Xb_k = Xb
-        Xb_dev = jnp.asarray(np.ascontiguousarray(Xb, dtype=np.int32))
+        # disk-resident codes: skip the whole-matrix int32 device copy and
+        # stage each histogram call's row gather to device instead (the
+        # gather is bounded by the call's padded frontier chunk)
+        Xb_dev = None if _is_streamed(Xb) else jnp.asarray(
+            np.ascontiguousarray(Xb, dtype=np.int32))
         dt_name = str(_jax.dtypes.canonicalize_dtype(np.float64))
         jax_pallas = (_JAX_USE_PALLAS if _JAX_USE_PALLAS is not None
                       else hops.pallas_supported())
@@ -706,7 +769,10 @@ def _grow_trees(Xb: np.ndarray, y: np.ndarray, tasks: Sequence[tuple],
             idx[:m] = rows_c
             nod = np.zeros(mp, np.int32)
             nod[:m] = loc_c
-            xb_dev = Xb_dev[jnp.asarray(idx)]
+            if Xb_dev is None:       # memmap codes: host gather, then stage
+                xb_dev = jnp.asarray(np.asarray(Xb[idx]).astype(np.int32))
+            else:
+                xb_dev = Xb_dev[jnp.asarray(idx)]
             if cls:
                 yv = np.zeros(mp, np.int32)
                 yv[:m] = y_c

@@ -22,6 +22,7 @@ the training / snapshot profiling hooks; the serving stack owns explicit
 registries (one per server ladder) so benchmarks can run an identical
 workload with observability on and off.
 """
+from .http import EXPOSITION_CONTENT_TYPE, MetricsHTTPServer
 from .metrics import (EWMA, Counter, Gauge, Histogram, MetricsRegistry,
                       global_registry, parse_exposition)
 from .profile import InstrumentedEngine, instrument
@@ -29,4 +30,5 @@ from .trace import NULL_SPAN, Span, Tracer
 
 __all__ = ["MetricsRegistry", "Counter", "Gauge", "Histogram", "EWMA",
            "global_registry", "parse_exposition", "Tracer", "Span",
-           "NULL_SPAN", "instrument", "InstrumentedEngine"]
+           "NULL_SPAN", "instrument", "InstrumentedEngine",
+           "MetricsHTTPServer", "EXPOSITION_CONTENT_TYPE"]

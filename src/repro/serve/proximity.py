@@ -143,7 +143,31 @@ class ProxRequest:
             else self.done_at - self.admitted_at
 
 
-class ProximityServer:
+class _MetricsHTTPMixin:
+    """``/metrics`` scrape endpoint lifecycle shared by both servers.
+
+    ``start_metrics_http`` is idempotent and binds an ephemeral port by
+    default (returns the :class:`~repro.obs.http.MetricsHTTPServer`, whose
+    ``.port``/``.url`` identify the scrape target); ``stop_metrics_http``
+    is safe to call without a running endpoint.
+    """
+
+    _metrics_http = None
+
+    def start_metrics_http(self, host: str = "127.0.0.1", port: int = 0):
+        if self._metrics_http is None:
+            from ..obs.http import MetricsHTTPServer
+            self._metrics_http = MetricsHTTPServer(self.registry, host=host,
+                                                   port=port).start()
+        return self._metrics_http
+
+    def stop_metrics_http(self) -> None:
+        if self._metrics_http is not None:
+            self._metrics_http.stop()
+            self._metrics_http = None
+
+
+class ProximityServer(_MetricsHTTPMixin):
     """Slot-batched serving loop over a ``ProximityEngine``.
 
     Parameters
@@ -670,7 +694,7 @@ class TieredRequest:
             self.done_at - self.submitted_at
 
 
-class TieredProximityServer:
+class TieredProximityServer(_MetricsHTTPMixin):
     """Deadline-aware serving across an engine ladder.
 
     Tiers are ordered cheapest-first.  Admission routes each request to the
@@ -1172,6 +1196,7 @@ class TieredProximityServer:
         for t in self._threads:
             t.join(timeout=10.0)
         self._threads = []
+        self.stop_metrics_http()
 
     def wait(self, uids: Sequence[int], timeout: Optional[float] = None
              ) -> List[Any]:

@@ -420,3 +420,80 @@ class TestGlobalHooks:
             assert h.labels(op="load").count == 1
         finally:
             set_global_registry(old)
+
+
+# ------------------------------------------------------- /metrics endpoint
+class TestMetricsHTTP:
+    def test_scrape_roundtrip_and_404(self):
+        import urllib.error
+        import urllib.request
+
+        from repro.obs.http import EXPOSITION_CONTENT_TYPE, MetricsHTTPServer
+
+        reg = MetricsRegistry()
+        reg.counter("scrapes_total", "n", labels=("who",)).labels(
+            who="test").inc(3)
+        srv = MetricsHTTPServer(reg).start()
+        try:
+            assert srv.port is not None and srv.url.endswith("/metrics")
+            with urllib.request.urlopen(srv.url, timeout=5) as resp:
+                assert resp.status == 200
+                assert resp.headers["Content-Type"] == EXPOSITION_CONTENT_TYPE
+                body = resp.read().decode("utf-8")
+            parsed = parse_exposition(body)
+            assert parsed[("scrapes_total", (("who", "test"),))] == 3.0
+            with pytest.raises(urllib.error.HTTPError) as exc:
+                urllib.request.urlopen(
+                    f"http://127.0.0.1:{srv.port}/other", timeout=5)
+            assert exc.value.code == 404
+        finally:
+            srv.stop()
+        assert srv.port is None and srv.url is None
+        srv.stop()                                  # idempotent
+
+    def test_server_helper_exposes_registry(self, obs_setup):
+        import urllib.request
+
+        fk = obs_setup["fk"]
+        srv = ProximityServer(fk.engine, y=obs_setup["y"], n_slots=8)
+        try:
+            http = srv.start_metrics_http()
+            assert srv.start_metrics_http() is http     # idempotent
+            srv.serve([("predict", obs_setup["Xq"][:8])])
+            with urllib.request.urlopen(http.url, timeout=5) as resp:
+                body = resp.read().decode("utf-8")
+            assert "serve_requests_total" in body
+        finally:
+            srv.stop_metrics_http()
+        assert srv._metrics_http is None
+
+
+# ------------------------------------------------- sharded matmat metrics
+def test_sharded_matmat_observed_in_global_registry():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro.core import jax_ops
+
+    old = global_registry()
+    reg = MetricsRegistry()
+    set_global_registry(reg)
+    try:
+        mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        rng = np.random.default_rng(0)
+        N, T, L = 32, 4, 20
+        gl = rng.integers(0, 5, (N, T)) + np.arange(T)[None] * 5
+        q = rng.random((N, T))
+        V = rng.random((N, 2))
+        out = jax_ops.sharded_swlc_matmat(
+            mesh, jnp.array(gl), jnp.array(q), jnp.array(q), jnp.array(V), L)
+        assert np.asarray(out).shape == (N, 2)
+        parsed = parse_exposition(reg.exposition())
+        lbl = (("op", "sharded_matmat"), ("backend", "jax"), ("tier", ""))
+        assert parsed[("engine_op_calls_total", lbl)] == 1.0
+        assert parsed[("engine_op_seconds_count", lbl)] == 1.0
+        assert parsed[("engine_op_seconds_sum", lbl)] > 0.0
+    finally:
+        set_global_registry(old)

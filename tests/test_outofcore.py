@@ -1,0 +1,376 @@
+"""Out-of-core pipeline: streamed binning, memmap training, streamed CSR
+factorization, budgeted engine, chunked context — every disk-resident path
+must be bit-identical to its in-memory twin."""
+import os
+
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from _hyp import given, settings, st
+from repro.core.api import ForestKernel
+from repro.core.context import EnsembleContext
+from repro.core.engine import ProximityEngine
+from repro.core.factorization import streamed_leaf_map
+from repro.core.leafmap import build_leaf_map
+from repro.core.weights import get_assignment
+from repro.data.synthetic import gaussian_classes
+from repro.forest import _native
+from repro.forest.ensemble import GradientBoostedTrees, RandomForest
+from repro.forest.training import Binner, fit_forest_binned
+
+NATIVE = pytest.mark.skipif(not _native.available(),
+                            reason="no host C compiler")
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+
+def _random_factors(n, T, leaves_per_tree, seed=0, zero_rows=(),
+                    zero_frac=0.4):
+    """(global_leaves, weights, total_leaves) with per-tree leaf ranges."""
+    rng = np.random.default_rng(seed)
+    gl = np.zeros((n, T), dtype=np.int64)
+    off = 0
+    for t in range(T):
+        nl = leaves_per_tree[t % len(leaves_per_tree)]
+        gl[:, t] = rng.integers(0, nl, n) + off
+        off += nl
+    w = rng.random((n, T))
+    w[rng.random((n, T)) < zero_frac] = 0.0
+    for r in zero_rows:
+        w[r] = 0.0
+    return gl, w, off
+
+
+def _assert_same_csr(a: sp.csr_matrix, b: sp.csr_matrix):
+    assert a.shape == b.shape
+    for attr in ("indptr", "indices", "data"):
+        va, vb = getattr(a, attr), np.asarray(getattr(b, attr))
+        assert va.dtype == vb.dtype, (attr, va.dtype, vb.dtype)
+        np.testing.assert_array_equal(va, vb, err_msg=attr)
+
+
+# ---------------------------------------------------------------------------
+# streamed binner
+# ---------------------------------------------------------------------------
+
+def test_binner_streamed_transform_identity(tmp_path):
+    X, _ = gaussian_classes(700, d=9, seed=0)
+    rng = np.random.default_rng(0)
+    b = Binner(X, 64, rng)
+    assert b.code_dtype == np.uint8
+    ref = b.transform(X)
+    mm = b.transform_memmap(X, tmp_path / "xb.mm")
+    assert isinstance(mm, np.memmap) and mm.dtype == ref.dtype
+    np.testing.assert_array_equal(np.asarray(mm), ref)
+
+
+def test_binner_int16_codes(tmp_path):
+    X, _ = gaussian_classes(600, d=4, seed=1)
+    b = Binner(X, 300, np.random.default_rng(0))
+    assert b.code_dtype == np.int16
+    ref = b.transform(X)
+    assert ref.dtype == np.int16
+    mm = b.transform_memmap(X, tmp_path / "xb.mm")
+    np.testing.assert_array_equal(np.asarray(mm), ref)
+
+
+def test_binner_transform_out_validation():
+    X, _ = gaussian_classes(50, d=3, seed=0)
+    b = Binner(X, 32, np.random.default_rng(0))
+    with pytest.raises(ValueError, match="out must be"):
+        b.transform(X, out=np.empty((50, 3), dtype=np.int32))
+    with pytest.raises(ValueError, match="out must be"):
+        b.transform(X, out=np.empty((49, 3), dtype=np.uint8))
+
+
+# ---------------------------------------------------------------------------
+# memmap training
+# ---------------------------------------------------------------------------
+
+def _trees_equal(a, b):
+    for t1, t2 in zip(a, b):
+        for f in ("feature", "threshold", "left", "right", "value"):
+            if not np.array_equal(getattr(t1, f), getattr(t2, f)):
+                return False
+    return True
+
+
+@pytest.mark.parametrize("backend", [
+    "numpy", pytest.param("native", marks=NATIVE)])
+def test_fit_forest_binned_memmap_bit_identity(backend, tmp_path):
+    X, y = gaussian_classes(900, d=7, n_classes=3, seed=2)
+    rng = np.random.default_rng(0)
+    binner = Binner(X, 64, rng)
+    Xb = binner.transform(X)
+    mm = binner.transform_memmap(X, tmp_path / "xb.mm")
+    from repro.forest.bootstrap import bootstrap_counts
+    from repro.forest.training import TreeParams
+    inbag = bootstrap_counts(len(X), 4, rng, True)
+    params = TreeParams(task="classification", n_classes=3, max_depth=12,
+                        min_samples_leaf=1, min_samples_split=2,
+                        max_features="sqrt", n_bins=64, splitter="best",
+                        tree_backend=backend)
+    rngs_a = np.random.default_rng(7).spawn(4)
+    rngs_b = np.random.default_rng(7).spawn(4)
+    ta = fit_forest_binned(Xb, y.astype(np.int64), inbag, params, rngs_a,
+                           binner, backend=backend)
+    tb = fit_forest_binned(mm, y.astype(np.int64), inbag, params, rngs_b,
+                           binner, backend=backend)
+    assert _trees_equal(ta, tb)
+
+
+@pytest.mark.parametrize("backend", [
+    "numpy", pytest.param("native", marks=NATIVE)])
+def test_forest_xb_scratch_bit_identity_and_cleanup(backend, tmp_path):
+    X, y = gaussian_classes(800, d=6, n_classes=3, seed=3)
+    scratch = tmp_path / "scr"
+    a = RandomForest(n_trees=5, seed=0, tree_backend=backend).fit(X, y)
+    b = RandomForest(n_trees=5, seed=0, tree_backend=backend,
+                     xb_scratch=str(scratch)).fit(X, y)
+    assert _trees_equal(a.trees_, b.trees_)
+    assert list(scratch.iterdir()) == []     # cleaned on success
+
+
+def test_xb_scratch_cleanup_on_failure(tmp_path, monkeypatch):
+    X, y = gaussian_classes(300, d=5, n_classes=2, seed=4)
+    scratch = tmp_path / "scr"
+
+    def boom(*a, **k):
+        raise RuntimeError("injected")
+
+    import repro.forest.ensemble as ens
+    monkeypatch.setattr(ens, "fit_forest_binned", boom)
+    monkeypatch.setattr(ens, "fit_tree_binned", boom)
+    with pytest.raises(RuntimeError, match="injected"):
+        RandomForest(n_trees=3, seed=0, xb_scratch=str(scratch)).fit(X, y)
+    assert list(scratch.iterdir()) == []     # cleaned on failure too
+
+
+def test_gbt_xb_scratch_bit_identity(tmp_path):
+    X, y = gaussian_classes(500, d=6, n_classes=2, sep=3.0, seed=5)
+    a = GradientBoostedTrees(n_trees=4, seed=0).fit(X, y)
+    b = GradientBoostedTrees(n_trees=4, seed=0,
+                             xb_scratch=str(tmp_path)).fit(X, y)
+    assert _trees_equal(a.trees_, b.trees_)
+    np.testing.assert_array_equal(a.tree_weights_, b.tree_weights_)
+    assert not any(p.name.startswith("xb_") for p in tmp_path.iterdir())
+
+
+# ---------------------------------------------------------------------------
+# streamed CSR factor construction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("row_chunk", [1, 13, 450, 463, 10_000])
+def test_streamed_leaf_map_bit_identity(row_chunk):
+    gl, w, L = _random_factors(450, 8, [30, 1, 17], seed=6,
+                               zero_rows=(0, 7, 449))
+    ref = build_leaf_map(gl, w, L)
+    got = streamed_leaf_map(gl, w, L, row_chunk=row_chunk)
+    _assert_same_csr(ref, got)
+    assert got.has_sorted_indices
+
+
+def test_streamed_leaf_map_single_leaf_trees():
+    # every tree has exactly one leaf -> every row maps to the same columns
+    gl, w, L = _random_factors(60, 5, [1], seed=7, zero_frac=0.5)
+    assert L == 5
+    _assert_same_csr(build_leaf_map(gl, w, L),
+                     streamed_leaf_map(gl, w, L, row_chunk=7))
+
+
+def test_streamed_leaf_map_all_zero_weights():
+    gl, w, L = _random_factors(40, 4, [6], seed=8)
+    w[:] = 0.0
+    got = streamed_leaf_map(gl, w, L, row_chunk=9)
+    _assert_same_csr(build_leaf_map(gl, w, L), got)
+    assert got.nnz == 0
+
+
+def test_streamed_leaf_map_memmap_backed(tmp_path):
+    gl, w, L = _random_factors(300, 6, [25], seed=9)
+    ref = build_leaf_map(gl, w, L)
+    got = streamed_leaf_map(gl, w, L, row_chunk=37,
+                            memmap_threshold_bytes=0,
+                            scratch_dir=str(tmp_path))
+    assert isinstance(got.data, np.memmap)
+    _assert_same_csr(ref, got)
+    # scratch files are unlinked immediately: nothing on disk afterwards
+    assert list(tmp_path.iterdir()) == []
+    # the memmap-backed matrix still computes like a normal CSR
+    v = np.random.default_rng(0).random((L, 2))
+    np.testing.assert_allclose(got @ v, ref @ v)
+
+
+def test_streamed_leaf_map_memmap_input(tmp_path):
+    gl, w, L = _random_factors(200, 5, [12], seed=10)
+    glm = np.memmap(tmp_path / "gl.mm", dtype=gl.dtype, mode="w+",
+                    shape=gl.shape)
+    glm[:] = gl
+    wm = np.memmap(tmp_path / "w.mm", dtype=w.dtype, mode="w+",
+                   shape=w.shape)
+    wm[:] = w
+    _assert_same_csr(build_leaf_map(gl, w, L),
+                     streamed_leaf_map(glm, wm, L, row_chunk=41))
+
+
+@settings(deadline=None, max_examples=20)
+@given(n=st.integers(min_value=1, max_value=120),
+       row_chunk=st.integers(min_value=1, max_value=150),
+       seed=st.integers(min_value=0, max_value=50))
+def test_streamed_leaf_map_chunk_boundary_property(n, row_chunk, seed):
+    gl, w, L = _random_factors(n, 3, [5, 1], seed=seed,
+                               zero_rows=(0,) if n > 1 else ())
+    _assert_same_csr(build_leaf_map(gl, w, L),
+                     streamed_leaf_map(gl, w, L, row_chunk=row_chunk))
+
+
+# ---------------------------------------------------------------------------
+# chunked context + budgeted engine
+# ---------------------------------------------------------------------------
+
+def _fitted(n=700, n_trees=8, seed=0):
+    X, y = gaussian_classes(n, d=6, n_classes=3, seed=seed)
+    return RandomForest(n_trees=n_trees, seed=seed).fit(X, y), X, y
+
+
+@pytest.mark.parametrize("row_chunk", [1, 97, 700, 5000])
+def test_context_row_chunk_digest_identity(row_chunk):
+    f, _, _ = _fitted()
+    assert EnsembleContext.from_forest(f).digest() == \
+        EnsembleContext.from_forest(f, row_chunk=row_chunk).digest()
+
+
+@pytest.mark.parametrize("method", ["original", "oob", "gap"])
+def test_engine_budget_bit_identity(method):
+    f, X, y = _fitted()
+    ctx = EnsembleContext.from_forest(f)
+    a = ProximityEngine(ctx, get_assignment(method, ctx), forest=f)
+    b = ProximityEngine(ctx, get_assignment(method, ctx), forest=f,
+                        memory_budget_bytes=1 << 20)
+    _assert_same_csr(a.Q, b.Q)
+    _assert_same_csr(a.W, b.W)
+    V = np.random.default_rng(0).random((len(X), 3))
+    np.testing.assert_array_equal(a.matmat(V), b.matmat(V))
+    # wide V under a tiny budget forces the column-chunked bucket table
+    c = ProximityEngine(ctx, get_assignment(method, ctx), forest=f,
+                        memory_budget_bytes=1 << 14)
+    Vw = np.random.default_rng(1).random((len(X), 40))
+    assert c._col_chunk(40) < 40
+    np.testing.assert_array_equal(a.matmat(Vw), c.matmat(Vw))
+    mask = (np.arange(len(X)) % 3 == 0).astype(float)
+    np.testing.assert_array_equal(a.matmat(Vw, col_mask=mask),
+                                  c.matmat(Vw, col_mask=mask))
+    np.testing.assert_allclose(a.squared_row_sums(class_ids=y, n_classes=3),
+                               b.squared_row_sums(class_ids=y, n_classes=3))
+    ia, va = a.topk(5)
+    ib, vb = b.topk(5)
+    np.testing.assert_allclose(va, vb)
+
+
+def test_engine_memory_bytes_budget_fields():
+    f, _, _ = _fitted(n=300, n_trees=4)
+    ctx = EnsembleContext.from_forest(f)
+    asg = get_assignment("gap", ctx)
+    plain = ProximityEngine(ctx, asg, forest=f).memory_bytes()
+    assert "budget" not in plain
+    tight = ProximityEngine(ctx, asg, forest=f,
+                            memory_budget_bytes=1).memory_bytes()
+    assert tight["budget"] == 1 and tight["within_budget"] is False
+    roomy = ProximityEngine(ctx, asg, forest=f,
+                            memory_budget_bytes=1 << 30).memory_bytes()
+    assert roomy["within_budget"] is True
+    from repro.obs.metrics import global_registry
+    assert "engine_memory_bytes" in global_registry().exposition()
+
+
+def test_forest_kernel_out_of_core_end_to_end(tmp_path):
+    """ForestKernel plumbing: scratch_dir + memory_budget_bytes produce the
+    same kernel as the in-memory configuration."""
+    X, y = gaussian_classes(600, d=6, n_classes=3, seed=11)
+    a = ForestKernel(n_trees=6, seed=0, kernel_method="gap").fit(X, y)
+    b = ForestKernel(n_trees=6, seed=0, kernel_method="gap",
+                     scratch_dir=str(tmp_path / "scr"),
+                     memory_budget_bytes=1 << 20).fit(X, y)
+    _assert_same_csr(a.Q_, b.Q_)
+    _assert_same_csr(a.W_, b.W_)
+    np.testing.assert_array_equal(a.predict(), b.predict())
+    assert list((tmp_path / "scr").iterdir()) == []
+
+
+# ---------------------------------------------------------------------------
+# snapshot v2 (CSR factors) + v1 migration
+# ---------------------------------------------------------------------------
+
+def test_snapshot_v2_roundtrip_stores_csr(tmp_path):
+    X, y = gaussian_classes(400, d=6, n_classes=3, seed=12)
+    fk = ForestKernel(n_trees=6, seed=0, kernel_method="gap").fit(X, y)
+    p = tmp_path / "k.npz"
+    manifest = fk.save(p)
+    assert manifest["version"] == 2
+    with np.load(p) as data:
+        assert "factor_q_data" in data.files
+        assert "factor_q" not in data.files
+    fk2 = ForestKernel.load(p)
+    np.testing.assert_array_equal(fk2.engine.q, fk.engine.q)
+    np.testing.assert_array_equal(fk2.engine.w, fk.engine.w)
+    _assert_same_csr(fk.Q_, fk2.Q_)
+
+
+def test_snapshot_v1_dense_archive_accepted(tmp_path):
+    """A crafted v1 (dense-factor) archive loads with a one-time note."""
+    import json as _json
+
+    import repro.core.snapshot as snap
+
+    X, y = gaussian_classes(350, d=6, n_classes=3, seed=13)
+    fk = ForestKernel(n_trees=5, seed=0, kernel_method="gap").fit(X, y)
+    p2 = tmp_path / "v2.npz"
+    fk.save(p2)
+    # rewrite as the old v1 layout: dense factor arrays, version 1
+    with np.load(p2) as data:
+        arrays = {k: data[k] for k in data.files if k != "manifest"}
+        manifest = _json.loads(bytes(data["manifest"].tobytes()).decode())
+    for k in ("factor_q_data", "factor_q_indices", "factor_q_indptr",
+              "factor_w_data", "factor_w_indices", "factor_w_indptr"):
+        arrays.pop(k, None)
+        manifest["checksums"].pop(k, None)
+    arrays["factor_q"] = fk.engine.q
+    arrays["factor_w"] = fk.engine.w
+    manifest["version"] = 1
+    manifest["checksums"]["factor_q"] = snap._checksum(arrays["factor_q"])
+    manifest["checksums"]["factor_w"] = snap._checksum(arrays["factor_w"])
+    arrays["manifest"] = np.frombuffer(_json.dumps(manifest).encode(),
+                                       dtype=np.uint8)
+    p1 = tmp_path / "v1.npz"
+    np.savez_compressed(p1, **arrays)
+
+    snap._v1_migration_noted = False
+    with pytest.warns(UserWarning, match="v1"):
+        fk1 = ForestKernel.load(p1)
+    np.testing.assert_array_equal(fk1.engine.q, fk.engine.q)
+    # the note is one-time
+    snapshot_again = ForestKernel.load(p1)
+    assert snapshot_again is not None
+
+
+def test_snapshot_unknown_version_rejected(tmp_path):
+    from repro.core.snapshot import SnapshotError
+
+    X, y = gaussian_classes(200, d=5, n_classes=2, seed=14)
+    fk = ForestKernel(n_trees=4, seed=0).fit(X, y)
+    p = tmp_path / "k.npz"
+    fk.save(p)
+    import json as _json
+    with np.load(p) as data:
+        arrays = {k: data[k] for k in data.files if k != "manifest"}
+        manifest = _json.loads(bytes(data["manifest"].tobytes()).decode())
+    manifest["version"] = 99
+    arrays["manifest"] = np.frombuffer(_json.dumps(manifest).encode(),
+                                       dtype=np.uint8)
+    bad = tmp_path / "bad.npz"
+    np.savez_compressed(bad, **arrays)
+    with pytest.raises(SnapshotError, match="version"):
+        ForestKernel.load(bad)

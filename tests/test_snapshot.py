@@ -141,9 +141,9 @@ def test_gbt_snapshot_restores_base_score(tmp_path):
 
 def test_corrupted_array_rejected(snap_setup, tmp_path):
     def flip(arrays):
-        a = arrays["factor_q"].copy()
+        a = arrays["factor_q_data"].copy()
         a.flat[0] += 1.0
-        arrays["factor_q"] = a
+        arrays["factor_q_data"] = a
 
     bad = _tamper(snap_setup["path"], tmp_path / "bad.npz", flip)
     with pytest.raises(SnapshotError, match="checksum mismatch"):
@@ -152,7 +152,7 @@ def test_corrupted_array_rejected(snap_setup, tmp_path):
 
 def test_missing_array_rejected(snap_setup, tmp_path):
     bad = _tamper(snap_setup["path"], tmp_path / "missing.npz",
-                  lambda arrays: arrays.pop("factor_q"))
+                  lambda arrays: arrays.pop("factor_q_data"))
     with pytest.raises(SnapshotError, match="missing array"):
         load_kernel(bad)
 
